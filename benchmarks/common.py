@@ -1,0 +1,101 @@
+"""Shared benchmark helpers: timing, CSV emission, HLS/RTL-analog probes.
+
+The paper's measurement split (DESIGN.md section 2):
+  RTL side  = closed-form resource/cycle model of the Pallas kernel
+              (hand-scheduled => predictable by construction)
+  HLS side  = measured from the XLA-compiled reference: compile wall-clock
+              (synthesis time), memory_analysis temp bytes (resource
+              count), cost_analysis flops/bytes (work).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ops, packing, ref
+
+
+def time_call(fn, *args, reps: int = 3, warmup: int = 1) -> float:
+    """Median wall-clock seconds per call (after warmup, block_until_ready)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def compile_probe(fn, *arg_shapes) -> dict:
+    """Lower+compile with abstract args; returns times + memory analysis."""
+    t0 = time.perf_counter()
+    lowered = jax.jit(fn).lower(*arg_shapes)
+    t_lower = time.perf_counter() - t0
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t_compile = time.perf_counter() - t1
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):
+        cost = cost[0]
+    return {
+        "lower_s": t_lower,
+        "compile_s": t_compile,
+        "total_s": t_lower + t_compile,
+        "temp_bytes": getattr(mem, "temp_size_in_bytes", 0),
+        "arg_bytes": getattr(mem, "argument_size_in_bytes", 0),
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+    }
+
+
+def make_operands(mode: str, m: int, n: int, k: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    if mode == "xnor":
+        a = packing.pack_bits(jnp.asarray(rng.integers(0, 2, (m, k)), jnp.int32))
+        w = packing.pack_bits(jnp.asarray(rng.integers(0, 2, (n, k)), jnp.int32))
+    elif mode == "binary":
+        a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(0, 2, (n, k)), jnp.int8)
+    else:
+        a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-8, 8, (n, k)), jnp.int8)
+    return a, w
+
+
+def hls_ref_fn(mode: str, k: int):
+    if mode == "xnor":
+        return lambda a, w: ref.mvu_xnor_ref(a, w, k)
+    if mode == "binary":
+        return ref.mvu_binary_ref
+    return ref.mvu_int_ref
+
+
+def rtl_kernel_fn(mode: str, k: int, blocks: dict):
+    def f(a, w):
+        return ops.mvu(a, w, mode, k_bits=k if mode == "xnor" else None, **blocks)
+    return f
+
+
+def emit(rows: list[dict], path: str | None = None) -> None:
+    if not rows:
+        return
+    keys = list(rows[0].keys())
+    lines = [",".join(keys)]
+    for r in rows:
+        lines.append(",".join(str(r.get(k, "")) for k in keys))
+    text = "\n".join(lines)
+    print(text)
+    if path:
+        import os
+
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(text + "\n")

@@ -1,0 +1,41 @@
+"""Paper Fig 14: heat map of resource difference (HLS - RTL) over the
+PE x SIMD grid, 4-bit inputs.  Positive = RTL uses fewer resources."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compile_probe, emit, hls_ref_fn
+from repro.core.folding import Folding
+from repro.core.resource_model import mvu_resources
+
+
+def run(pes=(2, 4, 8, 16, 32, 64), simds=(2, 4, 8, 16, 32, 64), out=None):
+    # paper config 5/6 base: ifm_ch=64, kernel=4, ofm_ch=64, ifm_dim=8
+    n = 64
+    k = 4 * 4 * 64
+    px = (8 - 4 + 1) ** 2
+    rows = []
+    for pe in pes:
+        for simd in simds:
+            fold = Folding(pe, simd)
+            res = mvu_resources(n, k, fold, mode="standard", weight_bits=4,
+                                act_bits=4, n_pixels=px, n_thresh=15)
+            a_s = jax.ShapeDtypeStruct((128, k), jnp.int8)
+            w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
+            probe = compile_probe(hls_ref_fn("standard", k), a_s, w_s)
+            rows.append({
+                "PE": pe, "SIMD": simd,
+                "rtl_lut_bytes": res.lut_bytes,
+                "rtl_ff_bytes": res.ff_bytes,
+                "hls_temp_bytes": probe["temp_bytes"],
+                "delta_lut_bytes": probe["temp_bytes"] - res.lut_bytes,
+                "rtl_cycles": res.cycles,
+            })
+    emit(rows, out)
+    return rows
+
+
+if __name__ == "__main__":
+    run(out="experiments/bench/heatmap.csv")

@@ -1,0 +1,93 @@
+"""Paper Figs 8-13 + Table 4 + Fig 15: resource utilization & latency vs
+layer/implementation parameters, RTL(Pallas, closed-form) vs HLS(XLA,
+measured).
+
+Columns:
+  rtl_lut/ff/bram_bytes : analytical model (DESIGN.md metric mapping)
+  rtl_cycles            : folding cycle model (II=1)
+  hls_temp/arg_bytes    : XLA memory_analysis of the compiled reference
+  hls_compile_s         : XLA compile wall-clock (synthesis-time analog)
+  hls_flops/bytes       : XLA cost_analysis
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import compile_probe, emit, hls_ref_fn, make_operands
+from repro.configs.paper_sweeps import (
+    CONFIGURATIONS, LARGE_CONFIGS, SIMD_TYPES, expand, mvu_shape,
+)
+from repro.core.folding import Folding
+from repro.core.resource_model import mvu_resources
+from repro.kernels import packing
+
+import jax
+import jax.numpy as jnp
+
+
+def _row(c: dict, simd_type: str, sweep: str, value) -> dict:
+    n, k, px = mvu_shape(c)
+    pe = min(c["pe"], n)
+    simd = min(c["simd"], k)
+    # legality: clamp to divisors (paper keeps PE|N, SIMD|K by construction)
+    while n % pe:
+        pe -= 1
+    while k % simd:
+        simd -= 1
+    fold = Folding(pe, simd)
+    wb = 1 if simd_type in ("xnor", "binary") else 4
+    ab = 1 if simd_type == "xnor" else 4
+    res = mvu_resources(n, k, fold, mode=simd_type, weight_bits=wb,
+                        act_bits=ab, n_pixels=px, n_thresh=2**ab - 1)
+
+    # HLS analog: compile the XLA reference at the MVU's working shape
+    m = 128  # pixel tile fed per stream burst
+    if simd_type == "xnor":
+        a_s = jax.ShapeDtypeStruct((m, packing.num_words(k)), jnp.uint32)
+        w_s = jax.ShapeDtypeStruct((n, packing.num_words(k)), jnp.uint32)
+    else:
+        a_s = jax.ShapeDtypeStruct((m, k), jnp.int8)
+        w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
+    probe = compile_probe(hls_ref_fn(simd_type, k), a_s, w_s)
+
+    return {
+        "sweep": sweep,
+        "value": value,
+        "simd_type": simd_type,
+        "N": n, "K": k, "pixels": px, "PE": pe, "SIMD": simd,
+        "rtl_lut_bytes": res.lut_bytes,
+        "rtl_ff_bytes": res.ff_bytes,
+        "rtl_bram_bytes": res.bram_bytes,
+        "rtl_cycles": res.cycles,
+        "rtl_wmem_depth": res.weight_mem_depth,
+        "rtl_inbuf_depth": res.input_buffer_depth,
+        "hls_temp_bytes": probe["temp_bytes"],
+        "hls_arg_bytes": probe["arg_bytes"],
+        "hls_compile_s": round(probe["total_s"], 4),
+        "hls_flops": probe["flops"],
+        "hls_bytes": probe["bytes"],
+    }
+
+
+def run(config_ids=(1, 3, 5, 6), simd_types=SIMD_TYPES, out=None) -> list[dict]:
+    rows = []
+    for cid in config_ids:
+        sweep = CONFIGURATIONS[cid]["sweep"]
+        for params, value in expand(cid):
+            for st in simd_types:
+                rows.append(_row(params, st, f"cfg{cid}:{sweep}", value))
+    emit(rows, out)
+    return rows
+
+
+def run_large(out=None) -> list[dict]:
+    """Table 3/4: large designs (PE=SIMD=16), increasing IFM channels."""
+    rows = []
+    for i, c in enumerate(LARGE_CONFIGS):
+        rows.append(_row(c, "standard", "table3:ifm_ch", c["ifm_ch"]))
+    emit(rows, out)
+    return rows
+
+
+if __name__ == "__main__":
+    run(out="experiments/bench/resource_sweep.csv")
+    run_large(out="experiments/bench/resource_large.csv")

@@ -1,0 +1,99 @@
+"""Render EXPERIMENTS.md roofline/dry-run tables from experiments/dryrun/*.json."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dry_dir: str = "experiments/dryrun") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dry_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def fmt_bytes(b) -> str:
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def dryrun_table(recs: list[dict], mesh: str) -> str:
+    lines = [
+        "| arch | shape | compile s | args/dev | temp/dev | AR GB | AG GB | A2A GB | CP GB |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            lines.append(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - | - | - | - |")
+            continue
+        c = r["collectives"]
+        m = r["memory"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['compile_s']} | "
+            f"{fmt_bytes(m['argument_bytes'])} | {fmt_bytes(m['temp_bytes'])} | "
+            f"{c['all-reduce']/1e9:.2f} | {c['all-gather']/1e9:.2f} | "
+            f"{c['all-to-all']/1e9:.2f} | {c['collective-permute']/1e9:.2f} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(recs: list[dict], mesh: str = "pod") -> str:
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful ratio | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in recs:
+        if r.get("mesh") != mesh:
+            continue
+        if r.get("skipped"):
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | - | - | - | SKIP | - | - | {r['skipped']} |")
+            continue
+        ro = r["roofline"]
+        note = _bottleneck_note(r)
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {ro['compute_s']:.4g} | "
+            f"{ro['memory_s']:.4g} | {ro['collective_s']:.4g} | {ro['dominant']} | "
+            f"{r['model_flops']:.3g} | {r['useful_flops_ratio']:.2f} | {note} |"
+        )
+    return "\n".join(lines)
+
+
+def _bottleneck_note(r: dict) -> str:
+    ro = r["roofline"]
+    d = ro["dominant"]
+    if d == "compute":
+        return "reduce recompute (remat policy) or cast more matmuls to int8 MVU"
+    if d == "memory":
+        if r["kind"] == "decode":
+            return "quantize weights/KV (MVU w4/w8) to shrink the stream"
+        return "sequence-shard remat activations (SP) / larger per-step tiles"
+    return "overlap collectives with compute; shard experts over fewer axes"
+
+
+def main():
+    import sys
+
+    dry_dir = sys.argv[1] if len(sys.argv) > 1 else "experiments/dryrun"
+    recs = load(dry_dir)
+    for mesh in ("pod", "multipod"):
+        n_ok = sum(1 for r in recs if r.get("mesh") == mesh and not r.get("skipped"))
+        print(f"\n## Dry-run ({mesh}, {dry_dir}): {n_ok} cells compiled\n")
+        print(dryrun_table(recs, mesh))
+    print(f"\n## Roofline (single pod, {dry_dir})\n")
+    print(roofline_table(recs, "pod"))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Paper Fig 16: total synthesis time vs design size.
+
+The paper's mechanism: HLS synthesizes the *whole generated design* and its
+compile time grows superlinearly with design size, while RTL units are
+modular (each MVU instance is the same hand-written module, synthesized
+once per parameterization).  The TPU analog:
+
+  HLS side = XLA compile of the full generated dataflow graph (a chain of
+             L MVU layers lowered from the jnp reference) -- one monolithic
+             compile whose time grows with L and with PE/SIMD-dependent
+             shapes.
+  RTL side = Pallas kernel compiles: one per distinct (mode, block-shape)
+             parameterization, CACHED across instances -- adding layers
+             with the same folding adds zero compile time.
+
+Two sweeps: (a) chain length L at fixed folding, (b) PE/SIMD at fixed L=1
+(the paper's Fig 16 x-axes).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import compile_probe, emit, rtl_kernel_fn
+from repro.core.folding import Folding, to_tpu_blocks
+from repro.kernels import ref
+
+
+def _chain_fn(l: int, n: int):
+    def f(a, ws):
+        h = a
+        for i in range(l):
+            h = ref.mvu_int_ref(h, ws[i]).astype(jnp.int8)  # requantize analog
+        return h
+    return f
+
+
+def run_chain(lengths=(1, 2, 4, 8, 16, 32), n=64, k=256, out=None):
+    rows = []
+    rtl_cache: dict = {}
+    for l in lengths:
+        a_s = jax.ShapeDtypeStruct((128, k), jnp.int8)
+        w_s = jax.ShapeDtypeStruct((l, n, k), jnp.int8)
+        # n != k would break chaining; use square layers (n == k) past layer 0
+        hls = compile_probe(_chain_fn(l, n), jax.ShapeDtypeStruct((128, n), jnp.int8),
+                            jax.ShapeDtypeStruct((l, n, n), jnp.int8))
+        # RTL: one kernel parameterization reused by every layer in the chain
+        t0 = time.perf_counter()
+        key = ("standard", 32, 32)
+        if key not in rtl_cache:
+            blocks = to_tpu_blocks(Folding(32, 32), "standard")
+            rtl_cache[key] = compile_probe(
+                rtl_kernel_fn("standard", n, blocks),
+                jax.ShapeDtypeStruct((128, n), jnp.int8),
+                jax.ShapeDtypeStruct((n, n), jnp.int8),
+            )["total_s"]
+        rtl_s = rtl_cache[key] + (time.perf_counter() - t0)
+        rows.append({
+            "sweep": "chain_length", "value": l,
+            "hls_compile_s": round(hls["total_s"], 4),
+            "rtl_compile_s": round(rtl_s, 4),
+            "hls/rtl": round(hls["total_s"] / max(rtl_s, 1e-9), 2),
+        })
+    emit(rows, out)
+    return rows
+
+
+def run_folding(values=(2, 8, 32, 64), n=64, k=1024, out=None):
+    """PE/SIMD sweep at one layer: each folding is a new RTL
+    parameterization (compiled) but the same HLS reference shape."""
+    rows = []
+    for v in values:
+        blocks = to_tpu_blocks(Folding(v, 64), "standard")
+        a_s = jax.ShapeDtypeStruct((128, k), jnp.int8)
+        w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
+        hls = compile_probe(lambda a, w: ref.mvu_int_ref(a, w), a_s, w_s)
+        rtl = compile_probe(rtl_kernel_fn("standard", k, blocks), a_s, w_s)
+        rows.append({
+            "sweep": "pe", "value": v,
+            "hls_compile_s": round(hls["total_s"], 4),
+            "rtl_compile_s": round(rtl["total_s"], 4),
+        })
+    emit(rows, out)
+    return rows
+
+
+def run(values=(2, 8, 32), simd_types=("standard",), out=None):
+    rows = run_chain(out=None)
+    rows += run_folding(out=None)
+    emit([], out)
+    if out:
+        emit(rows, out)
+    return rows
+
+
+if __name__ == "__main__":
+    run_chain(out="experiments/bench/synthesis_time_chain.csv")
+    run_folding(out="experiments/bench/synthesis_time_folding.csv")

@@ -1,0 +1,37 @@
+"""Config registry: ``get_config(arch_id)`` / ``get_reduced(arch_id)``."""
+
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import ModelConfig
+
+ARCH_IDS = [
+    "yi-9b",
+    "command-r-plus-104b",
+    "nemotron-4-15b",
+    "h2o-danube-1.8b",
+    "qwen2-vl-7b",
+    "granite-moe-3b-a800m",
+    "qwen3-moe-235b-a22b",
+    "mamba2-780m",
+    "jamba-1.5-large-398b",
+    "whisper-tiny",
+]
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_") for a in ARCH_IDS}
+
+
+def get_config(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def get_reduced(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[name]).REDUCED
+
+
+__all__ = ["ARCH_IDS", "ModelConfig", "get_config", "get_reduced"]

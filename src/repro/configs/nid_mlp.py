@@ -1,0 +1,22 @@
+"""The paper's real-world use case (Table 6): 4-layer MLP for network
+intrusion detection on UNSW-NB15, 2-bit weights and activations.
+
+Layers (IFMch -> OFMch, PE, SIMD): 600->64 (64,50), 64->64 (16,32),
+64->64 (16,32), 64->1 (1,8).
+"""
+
+from repro.core.folding import Folding
+
+# (in_features K, out_features N, PE, SIMD) per layer, from Table 6
+LAYERS = [
+    (600, 64, 64, 50),
+    (64, 64, 16, 32),
+    (64, 64, 16, 32),
+    (64, 1, 1, 8),
+]
+WEIGHT_BITS = 2
+INPUT_BITS = 2
+
+
+def foldings() -> list[Folding]:
+    return [Folding(pe, simd) for (_, _, pe, simd) in LAYERS]

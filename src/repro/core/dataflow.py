@@ -1,0 +1,127 @@
+"""Streaming-dataflow schedule + executor (FINN backend analog).
+
+FINN connects one compute unit per layer with AXI streams; throughput is set
+by the slowest stage and small FIFOs decouple producer/consumer bursts
+(paper section 5.3).  TPUs are statically scheduled, so the runtime analog
+is (a) this schedule -- per-stage cycle counts, bottleneck stage, FIFO
+depths -- and (b) the pipeline-parallel executor in
+``repro.distributed.pipeline`` which streams microbatches through stages
+with ``ppermute`` transfers standing in for the AXI streams.
+
+``execute`` runs the lowered graph functionally (the behavioural model the
+RTL was validated against); integer semantics end-to-end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import swu as swu_mod
+from repro.core.ir import Graph
+from repro.core.mvu import MVUConfig, MVULayer
+from repro.core.resource_model import MVUResources
+from repro.kernels import packing
+
+
+@dataclasses.dataclass
+class StageInfo:
+    name: str
+    cycles: int
+    resources: MVUResources
+    fifo_depth: int
+
+
+@dataclasses.dataclass
+class DataflowSchedule:
+    stages: list[StageInfo]
+
+    @property
+    def bottleneck(self) -> StageInfo:
+        return max(self.stages, key=lambda s: s.cycles)
+
+    @property
+    def steady_state_interval(self) -> int:
+        """Cycles between successive inferences once the pipeline is full."""
+        return self.bottleneck.cycles
+
+    @property
+    def latency_cycles(self) -> int:
+        return sum(s.cycles for s in self.stages)
+
+    def summary(self) -> dict:
+        return {
+            "stages": len(self.stages),
+            "latency_cycles": self.latency_cycles,
+            "interval_cycles": self.steady_state_interval,
+            "bottleneck": self.bottleneck.name,
+            "total_bram_bytes": sum(s.resources.bram_bytes for s in self.stages),
+            "total_lut_bytes": sum(s.resources.lut_bytes for s in self.stages),
+        }
+
+
+def schedule(graph: Graph) -> DataflowSchedule:
+    shape = None
+    stages: list[StageInfo] = []
+    prev_cycles = None
+    for node in graph:
+        if node.op == "input":
+            shape = node.attrs["shape"]
+        elif node.op == "swu":
+            h, w, c = shape
+            kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
+            shape = (
+                swu_mod.out_dim(h, kd, st, pd),
+                swu_mod.out_dim(w, kd, st, pd),
+                kd * kd * c,
+            )
+        elif node.op == "mvu":
+            cfg: MVUConfig = node.attrs["config"]
+            px = shape[0] * shape[1] if (isinstance(shape, tuple) and len(shape) == 3) else 1
+            layer = MVULayer(cfg)
+            res = layer.resources(n_pixels=px)
+            # FIFO sizing: enough to absorb one producer burst while the
+            # consumer drains at its own rate (paper 5.3.2's small FIFO).
+            fold = cfg.resolved_folding()
+            burst = fold.pe  # outputs produced per cycle group
+            drain = 1 if prev_cycles is None else max(1, res.cycles // max(prev_cycles, 1))
+            fifo = max(2, burst * min(drain, 8))
+            stages.append(StageInfo(node.name, res.cycles, res, fifo))
+            prev_cycles = res.cycles
+            if isinstance(shape, tuple) and len(shape) == 3:
+                shape = (shape[0], shape[1], cfg.out_features)
+    return DataflowSchedule(stages)
+
+
+def execute(graph: Graph, x: jax.Array) -> jax.Array:
+    """Run the lowered integer graph on host (behavioural model).
+
+    x: for conv nets (B, H, W, C); for MLPs (B, K).  Integer dtypes.
+    """
+    cur = x
+    for node in graph:
+        if node.op == "input":
+            continue
+        if node.op == "swu":
+            cur = swu_mod.sliding_window(
+                cur, node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
+            )  # (B, P, K)
+        elif node.op == "mvu":
+            cfg: MVUConfig = node.attrs["config"]
+            layer = MVULayer(cfg)
+            params = node.params["mvu"]
+            xin = cur
+            if cfg.mode == "xnor" and xin.dtype != jnp.uint32:
+                xin = packing.pack_bits(xin.astype(jnp.int32))
+            cur = layer(params, xin)
+        elif node.op == "batchnorm":
+            g, b = node.params["gamma"], node.params["beta"]
+            m, v = node.params["mean"], node.params["var"]
+            cur = (cur - m) * g / jnp.sqrt(v + 1e-5) + b
+        elif node.op == "quant_act":
+            bits = node.attrs["bits"]
+            s = node.attrs.get("act_scale", 1.0)
+            cur = jnp.clip(jnp.round(cur / s), 0, 2**bits - 1).astype(jnp.int32)
+    return cur

@@ -1,0 +1,131 @@
+"""FINN's folding pass, ported to TPU tile selection.
+
+FINN time-multiplexes the weight matrix (N = O_c rows, K = Kd^2*I_c cols)
+onto a PE x SIMD array:
+
+    neuron fold   NF = N / PE        (PE must divide N)
+    synapse fold  SF = K / SIMD      (SIMD must divide K)
+    cycles per output pixel = NF * SF   at II = 1
+    total cycles = n_pixels * NF * SF
+
+On TPU, PE maps to the kernel's block_n and SIMD to block_k (x32 synapses
+per packed word for the XNOR datapath), so "folding" becomes BlockSpec tile
+selection under a VMEM budget -- same math, same balance condition.
+
+The pipeline balancer reproduces FINN's *Folding and Resource Estimation*
+pass: given a cycle target, assign each layer the smallest PE*SIMD product
+that meets it, which rate-matches the streaming pipeline (the slowest layer
+sets the initiation interval of the whole dataflow graph).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence
+
+from repro.kernels.packing import WORD_BITS
+
+
+@dataclasses.dataclass(frozen=True)
+class Folding:
+    pe: int
+    simd: int
+
+    def cycles(self, n: int, k: int, n_pixels: int = 1) -> int:
+        nf = -(-n // self.pe)
+        sf = -(-k // self.simd)
+        return n_pixels * nf * sf
+
+    def validate(self, n: int, k: int) -> None:
+        if n % self.pe:
+            raise ValueError(f"PE={self.pe} must divide N={n}")
+        if k % self.simd:
+            raise ValueError(f"SIMD={self.simd} must divide K={k}")
+
+
+def divisors(x: int) -> list[int]:
+    out = [d for d in range(1, int(math.isqrt(x)) + 1) if x % d == 0]
+    return sorted(set(out + [x // d for d in out]))
+
+
+def weight_mem_depth(n: int, k: int, fold: Folding) -> int:
+    """Paper Eq. (2): D_mem = K*N / (SIMD*PE), per-PE weight memory depth."""
+    return (k * n) // (fold.simd * fold.pe)
+
+
+def input_buffer_depth(k: int, fold: Folding) -> int:
+    """Input buffer depth K/SIMD (reused across the NF row groups)."""
+    return -(-k // fold.simd)
+
+
+def choose_folding(
+    n: int,
+    k: int,
+    *,
+    target_cycles: int | None = None,
+    max_pe: int = 128,
+    max_simd: int = 128,
+    n_pixels: int = 1,
+) -> Folding:
+    """Smallest PE*SIMD meeting ``target_cycles`` (FINN folding objective).
+
+    With no target, returns the largest legal array (fully-parallel bound).
+    Ties break toward larger SIMD (deeper dot products amortize the
+    accumulator, mirroring FINN's preference for SIMD before PE).
+    """
+    pes = [d for d in divisors(n) if d <= max_pe]
+    simds = [d for d in divisors(k) if d <= max_simd]
+    if target_cycles is None:
+        return Folding(max(pes), max(simds))
+    best: Folding | None = None
+    best_cost = None
+    for pe in pes:
+        for simd in simds:
+            f = Folding(pe, simd)
+            if f.cycles(n, k, n_pixels) <= target_cycles:
+                cost = (pe * simd, -simd)
+                if best_cost is None or cost < best_cost:
+                    best, best_cost = f, cost
+    if best is None:
+        best = Folding(max(pes), max(simds))  # can't meet target: go maximal
+    return best
+
+
+def balance_pipeline(
+    layer_shapes: Sequence[tuple[int, int, int]],  # (N, K, n_pixels)
+    *,
+    slowest_cycles: int | None = None,
+    max_pe: int = 128,
+    max_simd: int = 128,
+) -> list[Folding]:
+    """Rate-match a chain of MVU layers (FINN balanced-pipeline condition).
+
+    Every layer gets the cheapest folding whose cycle count does not exceed
+    the pipeline target; the default target is the cycle count of the
+    heaviest layer at full parallelism (nothing can beat that anyway).
+    """
+    if slowest_cycles is None:
+        slowest_cycles = max(
+            Folding(min(max_pe, n), min(max_simd, k)).cycles(n, k, px)
+            for n, k, px in layer_shapes
+        )
+    return [
+        choose_folding(n, k, target_cycles=slowest_cycles,
+                       max_pe=max_pe, max_simd=max_simd, n_pixels=px)
+        for n, k, px in layer_shapes
+    ]
+
+
+def to_tpu_blocks(fold: Folding, mode: str, m: int = 128) -> dict[str, int]:
+    """Map (PE, SIMD) onto Pallas block shapes.
+
+    block_n = PE (output rows in parallel), block_k = SIMD synapses per grid
+    step; the XNOR datapath packs 32 synapses per word so block_kw =
+    SIMD / 32.  Values are clamped up to TPU-friendly minima (8 sublanes /
+    128 lanes) -- small FPGA-style arrays are legal but pad on real silicon.
+    """
+    if mode == "xnor":
+        bkw = max(1, fold.simd // WORD_BITS)
+        return {"block_m": m, "block_n": max(8, fold.pe), "block_kw": bkw}
+    return {"block_m": m, "block_n": max(8, fold.pe), "block_k": max(8, fold.simd)}

@@ -1,0 +1,46 @@
+"""A small layer-graph IR -- the FINN-ONNX analog.
+
+FINN dataflow accelerators are (almost always) linear chains of layers, so
+the IR is a list of nodes.  Transformation passes (lowering.py) rewrite the
+chain exactly like FINN's *Lowering and Conversion to HLS Layers* and
+*Streamlining* passes; dataflow.py then plays the role of *Folding and
+Resource Estimation*.
+
+Supported ops:
+    input            attrs: shape, bits
+    conv             attrs: kernel, stride, pad; params: w (Kd,Kd,Cin,Cout)
+    linear           attrs: -; params: w (N, K) float
+    batchnorm        params: gamma, beta, mean, var
+    quant_act        attrs: bits, act_scale
+    swu              attrs: kernel, stride, pad  (after lowering)
+    mvu              attrs: MVUConfig; params: MVUParams (after lowering)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+
+@dataclasses.dataclass
+class Node:
+    op: str
+    name: str
+    attrs: dict[str, Any] = dataclasses.field(default_factory=dict)
+    params: dict[str, Any] = dataclasses.field(default_factory=dict)
+
+
+Graph = list
+
+
+def validate_chain(graph: Graph) -> None:
+    if not graph or graph[0].op != "input":
+        raise ValueError("graph must start with an input node")
+    known = {"input", "conv", "linear", "batchnorm", "quant_act", "swu", "mvu"}
+    for node in graph:
+        if node.op not in known:
+            raise ValueError(f"unknown op {node.op!r} ({node.name})")
+
+
+def find(graph: Graph, op: str) -> list[Node]:
+    return [n for n in graph if n.op == op]

@@ -1,0 +1,153 @@
+"""Graph transformation passes: FINN's lowering + streamlining, in JAX.
+
+    lower_to_mvu:   conv -> [swu, mvu];  linear -> mvu
+    streamline:     [mvu, batchnorm, quant_act] -> mvu(+thresholds)
+    apply_folding:  attach rate-balanced Folding to every mvu node
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import swu as swu_mod
+from repro.core.folding import balance_pipeline
+from repro.core.ir import Graph, Node, validate_chain
+from repro.core.mvu import MVUConfig, MVULayer
+from repro.core.thresholds import bn_quant_thresholds, streamline_signs
+
+
+def _infer_pixels(shape, node: Node) -> tuple[tuple, int]:
+    """Track (spatial shape, K) through the chain for folding/cycle math."""
+    if node.op == "swu":
+        h, w, c = shape
+        kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
+        oh = swu_mod.out_dim(h, kd, st, pd)
+        ow = swu_mod.out_dim(w, kd, st, pd)
+        return (oh, ow, kd * kd * c), oh * ow
+    return shape, 1
+
+
+def lower_to_mvu(graph: Graph, *, mode: str = "standard",
+                 weight_bits: int = 4, act_bits: int = 4,
+                 backend: str = "pallas") -> Graph:
+    """conv -> swu+mvu; linear -> mvu. Float weights stay attached (raw)."""
+    validate_chain(graph)
+    out: Graph = []
+    for node in graph:
+        if node.op == "conv":
+            kd = node.attrs["kernel"]
+            out.append(Node("swu", node.name + ".swu", dict(node.attrs)))
+            wm = swu_mod.pack_conv_weights(node.params["w"])  # (N, K)
+            cfg = MVUConfig(
+                in_features=wm.shape[1], out_features=wm.shape[0],
+                mode=mode, weight_bits=weight_bits, act_bits=act_bits,
+                backend=backend,
+            )
+            out.append(Node("mvu", node.name + ".mvu",
+                            {"config": cfg}, {"w_float": wm}))
+        elif node.op == "linear":
+            w = node.params["w"]
+            cfg = MVUConfig(
+                in_features=w.shape[1], out_features=w.shape[0],
+                mode=mode, weight_bits=weight_bits, act_bits=act_bits,
+                backend=backend,
+            )
+            out.append(Node("mvu", node.name + ".mvu", {"config": cfg},
+                            {"w_float": w}))
+        else:
+            out.append(node)
+    return out
+
+
+def streamline(graph: Graph) -> Graph:
+    """Fold [mvu, batchnorm, quant_act] into mvu-with-thresholds (MVTU)."""
+    out: Graph = []
+    i = 0
+    while i < len(graph):
+        node = graph[i]
+        nxt = graph[i + 1] if i + 1 < len(graph) else None
+        nx2 = graph[i + 2] if i + 2 < len(graph) else None
+        if (
+            node.op == "mvu"
+            and nxt is not None and nxt.op == "batchnorm"
+            and nx2 is not None and nx2.op == "quant_act"
+        ):
+            cfg: MVUConfig = node.attrs["config"]
+            w_float = node.params["w_float"]
+            bits = nx2.attrs["bits"]
+            # weight scale factors into BN: acc_int * (w_scale) feeds BN.
+            params, qt = MVULayer.from_float(cfg, w_float)
+            acc_scale = qt.scale.reshape(-1)  # (N,)
+            t, flip = bn_quant_thresholds(
+                nxt.params["gamma"], nxt.params["beta"],
+                nxt.params["mean"], nxt.params["var"],
+                bits=bits, acc_scale=1.0,
+                act_scale=nx2.attrs.get("act_scale", 1.0),
+            )
+            # thresholds computed against real acc = acc_int * acc_scale:
+            t = t / acc_scale[:, None]
+            # flip rows (negative gamma): negate quantized weight rows.
+            wq = streamline_signs(qt.values.astype(jnp.int32), flip).astype(qt.values.dtype)
+            qt2 = type(qt)(wq, qt.scale, qt.bits, qt.signed)
+            params, _ = _params_from_qtensor(cfg, qt2, t)
+            cfg2 = MVUConfig(**{**cfg.__dict__, "act_bits": bits})
+            out.append(Node("mvu", node.name, {"config": cfg2}, {"mvu": params}))
+            i += 3
+        else:
+            out.append(node)
+            i += 1
+    return out
+
+
+def _params_from_qtensor(cfg: MVUConfig, qt, thresholds):
+    from repro.core.mvu import MVUParams
+    from repro.core.thresholds import integerize_thresholds
+    from repro.kernels import packing
+
+    if cfg.mode == "xnor":
+        w = packing.pack_bits(packing.bipolar_to_bits(qt.values))
+    elif cfg.mode == "binary":
+        w = packing.bipolar_to_bits(qt.values).astype(jnp.int8)
+    else:
+        w = qt.values
+    t = integerize_thresholds(thresholds)
+    return MVUParams(weights=w, thresholds=t, out_scale=None), qt
+
+
+def finalize(graph: Graph) -> Graph:
+    """Quantize any mvu nodes still carrying float weights (no BN to fold)."""
+    out: Graph = []
+    for node in graph:
+        if node.op == "mvu" and "mvu" not in node.params:
+            cfg: MVUConfig = node.attrs["config"]
+            params, _ = MVULayer.from_float(cfg, node.params["w_float"])
+            out.append(Node("mvu", node.name, dict(node.attrs), {"mvu": params}))
+        else:
+            out.append(node)
+    return out
+
+
+def apply_folding(graph: Graph, *, target_cycles: int | None = None,
+                  max_pe: int = 128, max_simd: int = 128) -> Graph:
+    """FINN folding pass: rate-balance all MVU stages (DESIGN.md section 4)."""
+    shape = None
+    shapes = []
+    mvu_idx = []
+    for i, node in enumerate(graph):
+        if node.op == "input":
+            shape = node.attrs["shape"]
+        elif node.op == "swu":
+            shape, _ = _infer_pixels(shape, node)
+        if node.op == "mvu":
+            cfg: MVUConfig = node.attrs["config"]
+            px = shape[0] * shape[1] if (isinstance(shape, tuple) and len(shape) == 3) else 1
+            shapes.append((cfg.out_features, cfg.in_features, px))
+            mvu_idx.append(i)
+            if isinstance(shape, tuple) and len(shape) == 3:
+                shape = (shape[0], shape[1], cfg.out_features)
+    folds = balance_pipeline(shapes, slowest_cycles=target_cycles,
+                             max_pe=max_pe, max_simd=max_simd)
+    for i, f in zip(mvu_idx, folds):
+        cfg = graph[i].attrs["config"]
+        graph[i].attrs["config"] = MVUConfig(**{**cfg.__dict__, "folding": f})
+    return graph

@@ -1,0 +1,106 @@
+"""Quantizers with straight-through estimators (the Brevitas-analog layer).
+
+FINN consumes networks trained quantization-aware (Brevitas).  This module
+is the training-side counterpart: fake-quantizers whose forward pass emits
+the integer grid FINN's MVU consumes and whose backward pass is the usual
+straight-through estimator (STE).
+
+Conventions
+-----------
+* ``signed`` integer grids are symmetric: ``[-2^{b-1}+1, 2^{b-1}-1]`` (FINN
+  uses symmetric weight quantization so that weight*scale factorizes out).
+* ``unsigned`` grids are ``[0, 2^b - 1]`` (post-threshold activations).
+* 1-bit weights are bipolar {-1, +1} (paper Fig. 4a/4b).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _ste(x: jax.Array, q: jax.Array) -> jax.Array:
+    """Straight-through: forward ``q``, gradient of identity in ``x``."""
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def int_bounds(bits: int, signed: bool) -> tuple[int, int]:
+    if bits == 1 and signed:
+        return -1, 1  # bipolar
+    if signed:
+        return -(2 ** (bits - 1)) + 1, 2 ** (bits - 1) - 1
+    return 0, 2**bits - 1
+
+
+class QTensor(NamedTuple):
+    """An integer tensor plus the scale taking it back to real values."""
+
+    values: jax.Array  # integer grid (stored in int8/int32)
+    scale: jax.Array  # per-channel or scalar: real = values * scale
+    bits: int
+    signed: bool
+
+
+def quantize_weights(w: jax.Array, bits: int, axis: int | None = 0) -> QTensor:
+    """Post-training symmetric weight quantization (per-output-channel).
+
+    ``axis`` is the output-channel axis kept un-reduced for the scale; pass
+    ``None`` for a single tensor-wide scale.
+    """
+    lo, hi = int_bounds(bits, signed=True)
+    if bits == 1:
+        # bipolar: scale = mean |w| per channel (XNOR-Net style)
+        reduce_axes = tuple(i for i in range(w.ndim) if i != axis) if axis is not None else None
+        scale = jnp.mean(jnp.abs(w), axis=reduce_axes, keepdims=True)
+        q = jnp.where(w >= 0, 1, -1).astype(jnp.int8)
+        return QTensor(q, scale, bits, True)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis) if axis is not None else None
+    amax = jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / hi
+    q = jnp.clip(jnp.round(w / scale), lo, hi).astype(jnp.int8)
+    return QTensor(q, scale, bits, True)
+
+
+def fake_quant_weights(w: jax.Array, bits: int, axis: int | None = 0) -> jax.Array:
+    """QAT fake-quantization of weights with STE (returns real-valued grid)."""
+    if bits >= 16:
+        return w
+    if bits == 1:
+        reduce_axes = tuple(i for i in range(w.ndim) if i != axis) if axis is not None else None
+        scale = jnp.mean(jnp.abs(w), axis=reduce_axes, keepdims=True)
+        q = jnp.where(w >= 0, scale, -scale)
+        return _ste(w, q)
+    lo, hi = int_bounds(bits, signed=True)
+    reduce_axes = tuple(i for i in range(w.ndim) if i != axis) if axis is not None else None
+    amax = jax.lax.stop_gradient(jnp.max(jnp.abs(w), axis=reduce_axes, keepdims=True))
+    scale = jnp.maximum(amax, 1e-8) / hi
+    q = jnp.clip(jnp.round(w / scale), lo, hi) * scale
+    return _ste(w, q)
+
+
+def quantize_activations(x: jax.Array, bits: int, scale: jax.Array | float) -> jax.Array:
+    """Real -> unsigned integer activation grid (what thresholds produce)."""
+    lo, hi = int_bounds(bits, signed=False)
+    return jnp.clip(jnp.round(x / scale), lo, hi).astype(jnp.int32)
+
+
+def fake_quant_activations(x: jax.Array, bits: int, max_val: float = 1.0) -> jax.Array:
+    """QAT activation fake-quant: clipped ReLU onto a 2^bits-level grid, STE."""
+    if bits >= 16:
+        return x
+    if bits == 1:
+        q = (x >= 0).astype(x.dtype)
+        return _ste(x, q)
+    n = 2**bits - 1
+    xc = jnp.clip(x, 0.0, max_val)
+    q = jnp.round(xc * (n / max_val)) * (max_val / n)
+    return _ste(xc, q)
+
+
+def binarize_bipolar(x: jax.Array) -> jax.Array:
+    """Sign binarization with the BNN clipped-identity STE."""
+    q = jnp.where(x >= 0, 1.0, -1.0).astype(x.dtype)
+    xc = jnp.clip(x, -1.0, 1.0)
+    return xc + jax.lax.stop_gradient(q - xc)

@@ -1,0 +1,129 @@
+"""Analytical resource model -- the TPU analog of the paper's LUT/FF/BRAM
+counts (Section 6.2) and cycle/critical-path analysis (6.3).
+
+The RTL implementation's virtue in the paper is that its costs are
+*predictable by construction* (explicit cycle-accurate schedule), while the
+HLS side must be measured after compilation.  We keep that split:
+
+  * this module = the predictable, closed-form model for the hand-scheduled
+    Pallas kernel (the "RTL" side);
+  * ``compiled.memory_analysis()/cost_analysis()`` on the XLA-compiled
+    reference = the measured "HLS" side (see benchmarks/resource_sweep.py).
+
+Metric mapping (DESIGN.md section 2):
+    LUT analog   -> VMEM working-set bytes of one grid step (compute fabric)
+    FF analog    -> persistent pipeline state (accumulators + control)
+    BRAM analog  -> buffered memories: weight store + input buffer bytes
+    critical path-> per-grid-step work (MACs) / array peak
+    exec cycles  -> folding cycle model (II = 1)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.folding import Folding, input_buffer_depth, weight_mem_depth
+from repro.kernels.packing import WORD_BITS
+
+# TPU v5e hardware constants (roofline terms use the same numbers).
+PEAK_BF16_FLOPS = 197e12
+PEAK_INT8_OPS = 394e12
+HBM_BW = 819e9
+ICI_BW_PER_LINK = 50e9
+VMEM_BYTES = 64 * 2**20  # conservative per-core working budget
+CLOCK_HZ = 940e6  # v5e core clock, for cycle -> ns conversions
+
+
+def _act_bytes(mode: str, bits: int) -> float:
+    if mode == "xnor":
+        return 1.0 / 8.0
+    return 1.0  # int4 carried in int8 on the MXU path
+
+
+@dataclasses.dataclass(frozen=True)
+class MVUResources:
+    lut_bytes: int  # VMEM working set per grid step
+    ff_bytes: int  # persistent accumulator/control state
+    bram_bytes: int  # weight memory + input buffer
+    weight_mem_depth: int
+    input_buffer_depth: int
+    cycles: int
+    macs: int
+    ns_per_inference: float
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def mvu_resources(
+    n: int,
+    k: int,
+    fold: Folding,
+    *,
+    mode: str = "standard",
+    weight_bits: int = 4,
+    act_bits: int = 4,
+    n_pixels: int = 1,
+    block_m: int = 128,
+    n_thresh: int = 0,
+) -> MVUResources:
+    """Closed-form resource estimate for one MVU layer instance."""
+    wb = weight_bits / 8.0
+    ab = _act_bytes(mode, act_bits)
+
+    if mode == "xnor":
+        simd_words = max(1, fold.simd // WORD_BITS)
+        a_tile = block_m * (-(-k // WORD_BITS)) * 4  # packed input buffer (full K)
+        w_tile = fold.pe * simd_words * 4
+    else:
+        a_tile = block_m * k * ab  # input buffer: full-K resident
+        w_tile = fold.pe * fold.simd * wb
+    acc = block_m * fold.pe * 4  # int32 PE accumulators
+    thr = fold.pe * n_thresh * 4
+    out_tile = block_m * fold.pe * 4
+
+    lut = int(a_tile + w_tile + acc + out_tile + thr)
+    ff = int(acc + 64)  # accumulators + FSM/counter state
+    weight_store = int(n * k * wb)
+    in_buf = int(k * ab)
+    bram = weight_store + in_buf
+
+    cycles = fold.cycles(n, k, n_pixels)
+    macs = n * k * n_pixels
+    ns = cycles / CLOCK_HZ * 1e9
+    return MVUResources(
+        lut_bytes=lut,
+        ff_bytes=ff,
+        bram_bytes=bram,
+        weight_mem_depth=weight_mem_depth(n, k, fold),
+        input_buffer_depth=input_buffer_depth(k, fold),
+        cycles=cycles,
+        macs=macs,
+        ns_per_inference=ns,
+    )
+
+
+def roofline_terms(
+    hlo_flops: float,
+    hlo_bytes: float,
+    collective_bytes: float,
+    *,
+    chips: int,
+    peak_flops: float = PEAK_BF16_FLOPS,
+    hbm_bw: float = HBM_BW,
+    link_bw: float = ICI_BW_PER_LINK,
+) -> dict:
+    """The three roofline terms (seconds) + dominant bottleneck."""
+    compute_s = hlo_flops / (chips * peak_flops)
+    memory_s = hlo_bytes / (chips * hbm_bw)
+    collective_s = collective_bytes / (chips * link_bw)
+    terms = {"compute_s": compute_s, "memory_s": memory_s, "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    bound = max(terms.values())
+    total = sum(terms.values())
+    return {
+        **terms,
+        "dominant": dominant.removesuffix("_s"),
+        "bound_s": bound,
+        "roofline_fraction": (bound / total) if total > 0 else 0.0,
+    }

@@ -1,0 +1,57 @@
+"""Sliding Window Unit (SWU): FINN's on-the-fly im2col.
+
+Lowers a convolution input (B, H, W, C) into the GEMM activation matrix of
+paper Fig. 1: each output pixel becomes one row of K = Kd^2 * C features,
+ordered (ky, kx, c) -- the same order the weight matrix rows are packed in
+(see :func:`pack_conv_weights`).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def out_dim(size: int, kernel: int, stride: int, pad: int) -> int:
+    return (size + 2 * pad - kernel) // stride + 1
+
+
+def sliding_window(
+    x: jax.Array, kernel: int, stride: int = 1, pad: int = 0
+) -> jax.Array:
+    """(B, H, W, C) -> (B, OH*OW, Kd^2*C) in (ky, kx, c) feature order."""
+    b, h, w, c = x.shape
+    if pad:
+        x = jnp.pad(x, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+    oh = out_dim(h, kernel, stride, pad)
+    ow = out_dim(w, kernel, stride, pad)
+    # gather rows/cols: (OH, Kd) and (OW, Kd) index grids
+    iy = (jnp.arange(oh) * stride)[:, None] + jnp.arange(kernel)[None, :]
+    ix = (jnp.arange(ow) * stride)[:, None] + jnp.arange(kernel)[None, :]
+    # (B, OH, Kd, W', C) -> (B, OH, Kd, OW, Kd, C)
+    g = x[:, iy]  # (B, OH, Kd, Wp, C)
+    g = g[:, :, :, ix]  # (B, OH, Kd, OW, Kd, C)
+    g = jnp.moveaxis(g, 3, 1)  # (B, OW, OH, Kd, Kd, C) -> fix order below
+    g = jnp.swapaxes(g, 1, 2)  # (B, OH, OW, Kd, Kd, C): (ky, kx, c) per pixel
+    return g.reshape(b, oh * ow, kernel * kernel * c)
+
+
+def pack_conv_weights(w: jax.Array) -> jax.Array:
+    """Conv weights (Kd, Kd, Cin, Cout) -> MVU matrix (Cout, Kd^2*Cin)."""
+    kd, kd2, cin, cout = w.shape
+    assert kd == kd2
+    return jnp.transpose(w, (3, 0, 1, 2)).reshape(cout, kd * kd * cin)
+
+
+def conv_via_swu_mvu(
+    x: jax.Array, w: jax.Array, stride: int = 1, pad: int = 0
+) -> jax.Array:
+    """Reference conv = SWU + dense MVU matmul (for testing the lowering)."""
+    b, h, ww, c = x.shape
+    kd = w.shape[0]
+    cols = sliding_window(x, kd, stride, pad)  # (B, P, K)
+    wm = pack_conv_weights(w)  # (N, K)
+    out = jnp.einsum("bpk,nk->bpn", cols.astype(jnp.float32), wm.astype(jnp.float32))
+    oh = out_dim(h, kd, stride, pad)
+    ow = out_dim(ww, kd, stride, pad)
+    return out.reshape(b, oh, ow, w.shape[-1])

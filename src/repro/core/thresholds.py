@@ -1,0 +1,83 @@
+"""Multi-threshold activation: FINN's fused BatchNorm + quantized activation.
+
+FINN's MVU is really an MV*T*U: after the integer dot product it compares the
+accumulator against a sorted per-channel threshold vector and emits
+
+    act[c] = sum_t  (acc[c] >= T[c, t])        in  [0, 2^bits - 1]
+
+which is exactly ``quantize(BN(acc))`` once BN and the activation quantizer
+are folded into integer thresholds (the FINN "streamlining" pass).  This
+module computes those thresholds and provides the reference epilogue; the
+Pallas kernels fuse the same comparison loop after their accumulators.
+
+Negative BN gamma flips the comparison direction.  As in FINN streamlining we
+normalize that offline: rows with gamma < 0 have their weights (and
+thresholds) negated so the kernel only ever implements ``>=``.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ThresholdSpec(NamedTuple):
+    thresholds: jax.Array  # (out_channels, n_levels - 1), ascending per row
+    bits: int  # output activation bits; n_levels = 2**bits
+
+
+def apply_thresholds(acc: jax.Array, thresholds: jax.Array) -> jax.Array:
+    """Reference epilogue: acc (..., C), thresholds (C, T) -> (..., C) int32."""
+    return jnp.sum(acc[..., None] >= thresholds, axis=-1).astype(jnp.int32)
+
+
+def bn_quant_thresholds(
+    gamma: jax.Array,
+    beta: jax.Array,
+    mean: jax.Array,
+    var: jax.Array,
+    *,
+    bits: int,
+    acc_scale: float | jax.Array = 1.0,
+    act_scale: float | jax.Array = 1.0,
+    eps: float = 1e-5,
+) -> tuple[jax.Array, jax.Array]:
+    """Fold ``quant(BN(acc * acc_scale))`` into integer accumulator thresholds.
+
+    The quantizer maps real y to level j when  y >= (j - 0.5) * act_scale
+    (round-to-nearest on an unsigned grid with step ``act_scale``), for
+    j = 1..2^bits - 1.  Solving  BN(acc*acc_scale) >= y_j  for acc gives the
+    per-channel threshold
+
+        T[c, j] = ((y_j - beta[c]) * sqrt(var[c] + eps) / gamma[c] + mean[c])
+                  / acc_scale
+
+    Returns ``(thresholds, flip)`` where ``flip[c]`` is True for channels with
+    gamma < 0; callers must negate those weight rows (and the returned rows
+    are already negated accordingly) — see :func:`streamline_signs`.
+    Thresholds are *real-valued* here; for integer accumulators take
+    ``ceil`` (``acc >= T`` with integer acc is equivalent to ``acc >= ceil(T)``).
+    """
+    n_levels = 2**bits
+    j = jnp.arange(1, n_levels, dtype=jnp.float32)
+    y = (j - 0.5) * jnp.asarray(act_scale, jnp.float32)  # quantizer decision boundaries
+    std = jnp.sqrt(var + eps)
+    g = jnp.where(gamma == 0, 1e-12, gamma)
+    t = ((y[None, :] - beta[:, None]) * (std / g)[:, None] + mean[:, None]) / acc_scale
+    flip = gamma < 0
+    # for flipped rows the weight negation maps acc -> -acc, so T -> -T and
+    # the per-row threshold order reverses; re-sort ascending.
+    t = jnp.where(flip[:, None], -t[:, ::-1], t)
+    return t, flip
+
+
+def streamline_signs(w: jax.Array, flip: jax.Array) -> jax.Array:
+    """Negate the weight rows whose BN gamma was negative (w: (out, in))."""
+    return jnp.where(flip[:, None], -w, w)
+
+
+def integerize_thresholds(t: jax.Array) -> jax.Array:
+    """Real thresholds -> smallest integers giving identical >= decisions."""
+    return jnp.ceil(t).astype(jnp.int32)

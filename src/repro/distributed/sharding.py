@@ -1,0 +1,269 @@
+"""Logical sharding rules: parameter-tree paths -> PartitionSpecs.
+
+Rules are written against *logical* roles (column-parallel, row-parallel,
+expert-sharded, head-sharded, replicated) and matched by path suffix, so
+they hold for any mesh shape -- (16,16), (2,16,16), or a (2,2) host-device
+test mesh.  Leading stack axes (scan over layers / hybrid groups) are
+padded with None automatically.
+
+TP layout (Megatron-style 2D GEMM sharding over "model"):
+  wq/wk/wv, ffn up/gate, ssm z/x/dt projections: column-parallel
+  wo, ffn down, ssm out_proj: row-parallel (psum on exit)
+  experts: expert dim over "model" (EP); router replicated
+  embed: vocab-sharded; unembed: vocab-sharded output
+  per-head vectors (A_log, D, dt_bias), head-dim norms: "model"
+Batch is sharded over ("pod","data") jointly (DP); long-context decode
+shards KV-cache sequence over "model" (SP) -- see cache_pspec.
+"""
+
+from __future__ import annotations
+
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path-suffix tokens, spec builder over the *core* dims)
+# matched against "/".join(path); first hit wins.
+_RULES: list[tuple[str, tuple]] = [
+    ("embed/table", ("model", None)),
+    ("unembed/w", (None, "model")),
+    # integer-deployed MVU projections store (out, in) int8 + (out,) scale
+    ("wq/values", ("model", None)),
+    ("wk/values", ("model", None)),
+    ("wv/values", ("model", None)),
+    ("wo/values", (None, "model")),
+    ("w_up/values", ("model", None)),
+    ("w_gate/values", ("model", None)),
+    ("w_down/values", (None, "model")),
+    ("wq/scale", ("model",)),
+    ("wk/scale", ("model",)),
+    ("wv/scale", ("model",)),
+    ("w_up/scale", ("model",)),
+    ("w_gate/scale", ("model",)),
+    ("wo/scale", (None,)),
+    ("w_down/scale", (None,)),
+    ("wq/w", (None, "model")),
+    ("wk/w", (None, "model")),
+    ("wv/w", (None, "model")),
+    ("wo/w", ("model", None)),
+    ("w_up/w", (None, "model")),
+    ("w_gate/w", (None, "model")),
+    ("w_down/w", ("model", None)),
+    ("router/w", (None, None)),
+    # MoE expert stacks (E, d, f) / (E, f, d): experts over "model"
+    ("moe/w_up", ("model", None, None)),
+    ("moe/w_gate", ("model", None, None)),
+    ("moe/w_down", ("model", None, None)),
+    # ssm projections
+    ("w_z/w", (None, "model")),
+    ("w_x/w", (None, "model")),
+    ("w_B/w", (None, None)),
+    ("w_C/w", (None, None)),
+    ("w_dt/w", (None, "model")),
+    ("conv_x/w", (None, "model")),
+    ("conv_x/b", ("model",)),
+    ("conv_B/w", (None, None)),
+    ("conv_B/b", (None,)),
+    ("conv_C/w", (None, None)),
+    ("conv_C/b", (None,)),
+    ("A_log", ("model",)),
+    ("dt_bias", ("model",)),
+    ("ssm/D", ("model",)),
+    ("ssm/norm/scale", ("model",)),
+    ("out_proj/w", ("model", None)),
+    # norms & everything else: replicated
+    ("scale", (None,)),
+    ("bias", (None,)),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def spec_for_path(path, ndim: int) -> P:
+    s = _path_str(path)
+    for suffix, core in _RULES:
+        if suffix in s:
+            pad = ndim - len(core)
+            if pad < 0:  # leaf smaller than rule (e.g. scalar): replicate
+                return P()
+            return P(*([None] * pad + list(core)))
+    return P()
+
+
+def make_even(spec: P, shape, mesh: Mesh) -> P:
+    """pjit requires input dims to divide their mesh-axis product; prune or
+    relocate axes that don't.
+
+    Relocation: a single failing axis moves to a *later* replicated dim that
+    divides (e.g. embed (V, d) with odd V: vocab-sharding falls back to
+    d_model-sharding -- production systems pad the vocab instead; we keep
+    the assigned vocab exact).  Tuple entries drop members until they
+    divide (batch=1 over ("pod","data") -> replicated).
+    """
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+
+    def size_of(axes):
+        s = 1
+        for a in axes:
+            s *= mesh.shape[a]
+        return s
+
+    for i, e in enumerate(entries):
+        if e is None:
+            continue
+        axes = e if isinstance(e, tuple) else (e,)
+        if shape[i] % size_of(axes) == 0:
+            continue
+        moved = False
+        # relocation only for 2D weights (embed-style); for expert stacks a
+        # relocated axis would land on a contraction dim and force a psum
+        # inside every expert GEMM -- replicating (+ FSDP over "data") is
+        # the cheaper fallback there.
+        if not isinstance(e, tuple) and len(shape) == 2:
+            for j in range(i + 1, len(entries)):
+                if entries[j] is None and shape[j] > 1 and shape[j] % mesh.shape[e] == 0:
+                    entries[j] = e
+                    moved = True
+                    break
+        if not moved and isinstance(e, tuple):
+            keep = []
+            for a in axes:
+                if shape[i] % size_of(keep + [a]) == 0:
+                    keep.append(a)
+            if keep:
+                entries[i] = tuple(keep)
+                continue
+        entries[i] = None
+    return P(*entries)
+
+
+def _fsdp_extend(spec: P, shape) -> P:
+    """ZeRO-3 / FSDP: additionally shard the *last* replicated dim of every
+    >=2D weight over "data".  Combined with the TP rules this gives 2D
+    (data x model) weight sharding; GSPMD inserts the per-layer all-gathers
+    in fwd/bwd and the optimizer state inherits the full 2D sharding.
+    The last dim is chosen so layer-stack leading dims (scanned) stay
+    unsharded."""
+    if len(shape) < 2:
+        return spec
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    for i in range(len(entries) - 1, -1, -1):
+        if entries[i] is None and shape[i] > 1:
+            entries[i] = "data"
+            break
+    return P(*entries)
+
+
+def param_pspecs(params_shape, mesh: Mesh | None = None, *, fsdp: bool = False) -> dict:
+    """Pytree of PartitionSpecs matching a params (shape) tree."""
+    import jax
+
+    def spec(path, leaf):
+        s = spec_for_path(path, len(leaf.shape))
+        if fsdp:
+            s = _fsdp_extend(s, leaf.shape)
+        if mesh is not None:
+            s = make_even(s, leaf.shape, mesh)
+        return s
+
+    return jax.tree_util.tree_map_with_path(spec, params_shape)
+
+
+def param_shardings(mesh: Mesh, params_shape, *, fsdp: bool = False):
+    import jax
+
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(params_shape, mesh, fsdp=fsdp),
+    )
+
+
+def bytes_per_device(tree_shape, spec_tree, mesh: Mesh) -> float:
+    """Total bytes of a (shape) pytree per device under the given specs."""
+    import jax
+    import numpy as np
+
+    def leaf_bytes(leaf, spec):
+        if hasattr(spec, "spec"):  # NamedSharding
+            spec = spec.spec
+        # int4 packs two elements per byte on TPU (jax itemsize reports 1)
+        itemsize = 0.5 if "int4" in str(leaf.dtype) else leaf.dtype.itemsize
+        n = float(np.prod(leaf.shape)) * itemsize if leaf.shape else itemsize
+        shards = 1
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = entry if isinstance(entry, tuple) else (entry,)
+            for a in axes:
+                shards *= mesh.shape[a]
+        return n / shards
+
+    leaves = jax.tree.leaves(tree_shape)
+    specs = jax.tree.leaves(
+        spec_tree, is_leaf=lambda x: isinstance(x, P) or hasattr(x, "spec")
+    )
+    return sum(leaf_bytes(l, s) for l, s in zip(leaves, specs))
+
+
+def batch_pspec(mesh: Mesh) -> P:
+    """Tokens (B, S): batch over pod+data."""
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return P(dp, None)
+
+
+def batch_shardings(mesh: Mesh, batch_shape) -> dict:
+    import jax
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(path, leaf):
+        ndim = len(leaf.shape)
+        s = make_even(P(*([dp] + [None] * (ndim - 1))), leaf.shape, mesh)
+        return NamedSharding(mesh, s)
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shape)
+
+
+def cache_pspecs(mesh: Mesh, cache_shape, *, seq_over_model: bool = False):
+    """Decode-state shardings.
+
+    KV caches (L, B, T, G, hd): batch over DP axes; with seq_over_model the
+    cache *sequence* dim additionally shards over "model" (SP decode for
+    long contexts -- partial-softmax combining is inserted by GSPMD).
+    SSM states (L, B, H, P, N): heads over "model".
+    """
+    import jax
+
+    dp = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+    def spec(path, leaf):
+        s = _path_str(path)
+        nd = len(leaf.shape)
+        if s.endswith("/k") or s.endswith("/v") or s.endswith("_scale"):
+            tspec = "model" if seq_over_model else None
+            p = P(None, dp, tspec, None, None)
+        elif "state" in s:
+            p = P(*([None] * (nd - 4) + [dp, "model", None, None]))
+        elif "conv_x" in s:
+            p = P(*([None] * (nd - 3) + [dp, None, "model"]))
+        elif "conv_B" in s or "conv_C" in s:
+            p = P(*([None] * (nd - 3) + [dp, None, None]))
+        elif "pos" in s:
+            p = P()
+        elif "enc_out" in s:
+            p = P(dp, None, None)
+        elif nd >= 2:  # default: batch-shard dim 1 (dim 0 is the layer stack)
+            p = P(*([None, dp] + [None] * (nd - 2)))
+        else:
+            p = P()
+        return NamedSharding(mesh, make_even(p, leaf.shape, mesh))
+
+    return jax.tree_util.tree_map_with_path(spec, cache_shape)

@@ -1,0 +1,63 @@
+"""Shared pieces of the MVU Pallas kernels.
+
+The folded schedule (DESIGN.md §4) is identical for all three SIMD
+datapaths; only the inner dot-product step differs:
+
+    grid = (M/bm, N/bn, K/bk)            # (pixel tiles, NF, SF)
+    A block (bm, K)  @ index (m, 0)      # "input buffer": full-K resident,
+                                         #  re-used across the whole NF loop
+    W block (bn, bk) @ index (n, k)      # weight stream (PE memories)
+    acc scratch (bm, bn) int32 in VMEM   # PE accumulators
+    epilogue at k == SF-1                # thresholds / scale / raw acc
+
+PE = bn rows in parallel, SIMD = bk synapses per grid step (x32 for the
+bit-packed datapath). II = 1 grid step.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def swar_popcount(x: jax.Array) -> jax.Array:
+    """Branch-free SWAR popcount on uint32 (the LUT-fabric popcount analog)."""
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def epilogue_write(o_ref, acc, t_ref, s_ref) -> None:
+    """Write the MVTU epilogue: thresholds > scale > raw accumulator."""
+    if t_ref is not None:
+        # act = sum_t (acc >= T[c, t]) -- the multi-threshold unit.
+        thr = t_ref[...]  # (bn, T) int32
+        o_ref[...] = jnp.sum(
+            acc[:, :, None] >= thr[None, :, :], axis=-1, dtype=jnp.int32
+        )
+    elif s_ref is not None:
+        o_ref[...] = acc.astype(jnp.float32) * s_ref[...].reshape(1, -1)
+    else:
+        o_ref[...] = acc
+
+
+def pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:
+    size = x.shape[axis]
+    rem = (-size) % multiple
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def default_interpret() -> bool:
+    """Pallas kernels target TPU; everywhere else we validate via interpret."""
+    return jax.default_backend() != "tpu"
+
+
+def std_grid(m: int, n: int, k: int, bm: int, bn: int, bk: int):
+    return (pl.cdiv(m, bm), pl.cdiv(n, bn), pl.cdiv(k, bk))

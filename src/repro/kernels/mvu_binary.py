@@ -1,0 +1,123 @@
+"""Binary-weight MVU (paper Fig. 4b): {0,1}-coded +/-1 weights, n-bit inputs.
+
+The FPGA datapath selects +x or -x per synapse and feeds an adder tree.  On
+TPU we use the algebraic identity
+
+    sum_k x_k * (2 w_k - 1)  =  2 * (x . w01) - sum_k x_k
+
+so the select/add tree becomes one 0/1 int8 MXU matmul plus a per-row input
+sum correction -- the MXU *is* the compressor tree (cf. Preusser [36]).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._common import epilogue_write, pad_to, std_grid
+
+
+def _kernel(*refs, block_k: int, has_thresh: bool, has_scale: bool):
+    if has_thresh:
+        a_ref, w_ref, t_ref, o_ref, acc_ref = refs
+        s_ref = None
+    elif has_scale:
+        a_ref, w_ref, s_ref, o_ref, acc_ref = refs
+        t_ref = None
+    else:
+        a_ref, w_ref, o_ref, acc_ref = refs
+        t_ref = s_ref = None
+
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_blk = a_ref[:, pl.ds(k * block_k, block_k)]  # (bm, bk) int8
+    w_blk = w_ref[...]  # (bn, bk) int8 in {0,1}
+    dot = jax.lax.dot_general(
+        a_blk, w_blk, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    # per-block correction: 2*(x.w01) - sum(x); zero-padded K chunks add 0.
+    rowsum = jnp.sum(a_blk.astype(jnp.int32), axis=1, keepdims=True)
+    acc_ref[...] += 2 * dot - rowsum
+
+    @pl.when(k == nk - 1)
+    def _done():
+        epilogue_write(o_ref, acc_ref[...], t_ref, s_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def mvu_binary_pallas(
+    a: jax.Array,
+    w_bits: jax.Array,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[M,N] = epilogue(A[M,K] . (2*W01[N,K]-1)^T).
+
+    a: (M, K) int8 activations; w_bits: (N, K) int8 in {0,1}.
+    """
+    if thresholds is not None and out_scale is not None:
+        raise ValueError("thresholds and out_scale are mutually exclusive")
+    m, k = a.shape
+    n, k2 = w_bits.shape
+    assert k == k2
+
+    a_p = pad_to(pad_to(a, 0, block_m), 1, block_k)
+    w_p = pad_to(pad_to(w_bits.astype(jnp.int8), 0, block_n), 1, block_k)
+    mp, kp = a_p.shape
+    np_, _ = w_p.shape
+    grid = std_grid(mp, np_, kp, block_m, block_n, block_k)
+
+    in_specs = [
+        pl.BlockSpec((block_m, kp), lambda mi, ni, ki: (mi, 0)),
+        pl.BlockSpec((block_n, block_k), lambda mi, ni, ki: (ni, ki)),
+    ]
+    operands = [a_p, w_p]
+    has_thresh = thresholds is not None
+    has_scale = out_scale is not None
+    if has_thresh:
+        t_p = pad_to(thresholds.astype(jnp.int32), 0, block_n)
+        nt = t_p.shape[1]
+        in_specs.append(pl.BlockSpec((block_n, nt), lambda mi, ni, ki: (ni, 0)))
+        operands.append(t_p)
+        out_dtype = jnp.int32
+    elif has_scale:
+        s_p = pad_to(out_scale.reshape(-1, 1).astype(jnp.float32), 0, block_n, value=1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda mi, ni, ki: (ni, 0)))
+        operands.append(s_p)
+        out_dtype = jnp.float32
+    else:
+        out_dtype = jnp.int32
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, block_k=block_k, has_thresh=has_thresh, has_scale=has_scale
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="mvu_binary",
+    )(*operands)
+    return out[:m, :n]

@@ -1,0 +1,125 @@
+"""Standard-SIMD MVU (paper Fig. 4c): arbitrary-precision integer lanes.
+
+TPU adaptation: the per-lane multipliers + adder tree of the FPGA datapath
+map onto the MXU systolic array -- an int8 x int8 -> int32 matmul per grid
+step.  4-bit operands are carried in int8 (the MXU's native integer width);
+the int32 accumulator matches FINN's wide accumulator.  The multi-threshold
+unit (or a dequant scale) is fused as the output epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._common import epilogue_write, pad_to, std_grid
+
+
+def _kernel(*refs, block_k: int, has_thresh: bool, has_scale: bool):
+    if has_thresh:
+        a_ref, w_ref, t_ref, o_ref, acc_ref = refs
+        s_ref = None
+    elif has_scale:
+        a_ref, w_ref, s_ref, o_ref, acc_ref = refs
+        t_ref = None
+    else:
+        a_ref, w_ref, o_ref, acc_ref = refs
+        t_ref = s_ref = None
+
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # A stays resident across the whole (n, k) loop; slice the SF-th chunk.
+    a_blk = a_ref[:, pl.ds(k * block_k, block_k)]  # (bm, bk) int8
+    w_blk = w_ref[...]  # (bn, bk) int8
+    acc_ref[...] += jax.lax.dot_general(
+        a_blk,
+        w_blk,
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+
+    @pl.when(k == nk - 1)
+    def _done():
+        epilogue_write(o_ref, acc_ref[...], t_ref, s_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "interpret"),
+)
+def mvu_int_pallas(
+    a: jax.Array,
+    w: jax.Array,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[M,N] = epilogue(A[M,K] . W[N,K]^T); integer datapath.
+
+    a: (M, K) int8 (int4 values carried in int8)
+    w: (N, K) int8
+    thresholds: optional (N, T) int32  -> int32 activations in [0, T]
+    out_scale: optional (N,) float32   -> float32 dequantized output
+    """
+    if thresholds is not None and out_scale is not None:
+        raise ValueError("thresholds and out_scale are mutually exclusive")
+    m, k = a.shape
+    n, k2 = w.shape
+    assert k == k2, (a.shape, w.shape)
+
+    a_p = pad_to(pad_to(a, 0, block_m), 1, block_k)
+    w_p = pad_to(pad_to(w, 0, block_n), 1, block_k)
+    mp, kp = a_p.shape
+    np_, _ = w_p.shape
+    grid = std_grid(mp, np_, kp, block_m, block_n, block_k)
+
+    in_specs = [
+        pl.BlockSpec((block_m, kp), lambda mi, ni, ki: (mi, 0)),
+        pl.BlockSpec((block_n, block_k), lambda mi, ni, ki: (ni, ki)),
+    ]
+    operands = [a_p, w_p]
+    has_thresh = thresholds is not None
+    has_scale = out_scale is not None
+    if has_thresh:
+        t_p = pad_to(thresholds.astype(jnp.int32), 0, block_n)
+        nt = t_p.shape[1]
+        in_specs.append(pl.BlockSpec((block_n, nt), lambda mi, ni, ki: (ni, 0)))
+        operands.append(t_p)
+        out_dtype = jnp.int32
+    elif has_scale:
+        s_p = pad_to(out_scale.reshape(-1, 1).astype(jnp.float32), 0, block_n, value=1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda mi, ni, ki: (ni, 0)))
+        operands.append(s_p)
+        out_dtype = jnp.float32
+    else:
+        out_dtype = jnp.int32
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, block_k=block_k, has_thresh=has_thresh, has_scale=has_scale
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="mvu_int",
+    )(*operands)
+    return out[:m, :n]

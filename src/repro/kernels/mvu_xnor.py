@@ -1,0 +1,135 @@
+"""XNOR-popcount MVU (paper Fig. 4a): 1-bit weights x 1-bit activations.
+
+Faithful TPU port of the bit-serial FPGA datapath: 32 synapses are packed
+per uint32 "wire bundle" and each grid step computes, on the VPU,
+
+    acc[m, n] += sum_w popcount(~(a[m, w] ^ w[n, w]))
+
+with the bipolar dot product recovered in the epilogue as
+
+    dot = 2*acc - Kp - n_pad      (Kp = padded bits, n_pad = Kp - K)
+
+since every zero pad bit in *both* operands contributes one spurious
+popcount.  SIMD = 32 * block_kw synapses per step.
+
+A beyond-paper MXU alternative (unpack to +/-1 int8 and matmul) lives in
+ops.py as ``xnor_mxu`` -- benchmarked against this one in EXPERIMENTS.md.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels._common import epilogue_write, pad_to, std_grid, swar_popcount
+from repro.kernels.packing import WORD_BITS
+
+
+def _kernel(*refs, block_kw: int, k_bits: int, kp_bits: int,
+            has_thresh: bool, has_scale: bool):
+    if has_thresh:
+        a_ref, w_ref, t_ref, o_ref, acc_ref = refs
+        s_ref = None
+    elif has_scale:
+        a_ref, w_ref, s_ref, o_ref, acc_ref = refs
+        t_ref = None
+    else:
+        a_ref, w_ref, o_ref, acc_ref = refs
+        t_ref = s_ref = None
+
+    k = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a_blk = a_ref[:, pl.ds(k * block_kw, block_kw)]  # (bm, bkw) uint32
+    w_blk = w_ref[...]  # (bn, bkw) uint32
+    # (bm, bn, bkw) xnor + popcount, reduced over the word axis on the VPU.
+    xnor = ~(a_blk[:, None, :] ^ w_blk[None, :, :])
+    acc_ref[...] += jnp.sum(swar_popcount(xnor), axis=-1, dtype=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _done():
+        # bipolar dot over the true K bits (pad bits each added one count)
+        dot = 2 * acc_ref[...] - (kp_bits + (kp_bits - k_bits))
+        epilogue_write(o_ref, dot, t_ref, s_ref)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k_bits", "block_m", "block_n", "block_kw", "interpret"),
+)
+def mvu_xnor_pallas(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    k_bits: int,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_kw: int = 8,
+    interpret: bool = False,
+) -> jax.Array:
+    """Bipolar out[M,N] from packed a (M, Wd) uint32 and w (N, Wd) uint32."""
+    if thresholds is not None and out_scale is not None:
+        raise ValueError("thresholds and out_scale are mutually exclusive")
+    m, wd = a_packed.shape
+    n, wd2 = w_packed.shape
+    assert wd == wd2
+
+    a_p = pad_to(pad_to(a_packed, 0, block_m), 1, block_kw)
+    w_p = pad_to(pad_to(w_packed, 0, block_n), 1, block_kw)
+    mp, wdp = a_p.shape
+    np_, _ = w_p.shape
+    kp_bits = wdp * WORD_BITS
+    grid = std_grid(mp, np_, wdp, block_m, block_n, block_kw)
+
+    in_specs = [
+        pl.BlockSpec((block_m, wdp), lambda mi, ni, ki: (mi, 0)),
+        pl.BlockSpec((block_n, block_kw), lambda mi, ni, ki: (ni, ki)),
+    ]
+    operands = [a_p, w_p]
+    has_thresh = thresholds is not None
+    has_scale = out_scale is not None
+    if has_thresh:
+        t_p = pad_to(thresholds.astype(jnp.int32), 0, block_n)
+        nt = t_p.shape[1]
+        in_specs.append(pl.BlockSpec((block_n, nt), lambda mi, ni, ki: (ni, 0)))
+        operands.append(t_p)
+        out_dtype = jnp.int32
+    elif has_scale:
+        s_p = pad_to(out_scale.reshape(-1, 1).astype(jnp.float32), 0, block_n, value=1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda mi, ni, ki: (ni, 0)))
+        operands.append(s_p)
+        out_dtype = jnp.float32
+    else:
+        out_dtype = jnp.int32
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel,
+            block_kw=block_kw,
+            k_bits=k_bits,
+            kp_bits=kp_bits,
+            has_thresh=has_thresh,
+            has_scale=has_scale,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((block_m, block_n), lambda mi, ni, ki: (mi, ni)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.int32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+        name="mvu_xnor",
+    )(*operands)
+    return out[:m, :n]

@@ -1,0 +1,104 @@
+"""Public jit'd entry points for the MVU kernels.
+
+``mvu(...)`` dispatches on the SIMD-lane datapath (paper Fig. 4):
+
+    mode="xnor"     1-bit x 1-bit, bit-packed XNOR+popcount   (Fig. 4a)
+    mode="binary"   {+-1} weights x n-bit inputs               (Fig. 4b)
+    mode="standard" arbitrary-precision integer lanes          (Fig. 4c)
+
+Each mode has two backends:
+    backend="pallas"  hand-scheduled kernel (the paper's RTL analog)
+    backend="xla"     pure-jnp reference compiled by XLA (the HLS analog)
+
+On non-TPU hosts the Pallas backend runs in interpret mode (CPU validation);
+the TPU is the deployment target.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import packing, ref
+from repro.kernels._common import default_interpret
+from repro.kernels.mvu_binary import mvu_binary_pallas
+from repro.kernels.mvu_int import mvu_int_pallas
+from repro.kernels.mvu_xnor import mvu_xnor_pallas
+
+MODES = ("xnor", "binary", "standard")
+BACKENDS = ("pallas", "xla")
+
+
+def xnor_mxu(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    k_bits: int,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Beyond-paper XNOR variant: unpack to +/-1 int8 and use the MXU.
+
+    On FPGA the bit-serial datapath wins because LUTs are the scarce
+    resource; on TPU the MXU's int8 path delivers 394 TOP/s vs the VPU's
+    ~4 TOP/s, so paying an 8x unpack blow-up in VMEM traffic can still win
+    by >10x on compute.  Benchmarked against the faithful datapath in
+    EXPERIMENTS.md section Perf.
+    """
+    a = packing.bits_to_bipolar(packing.unpack_bits(a_packed, k_bits)).astype(jnp.int8)
+    w = packing.bits_to_bipolar(packing.unpack_bits(w_packed, k_bits)).astype(jnp.int8)
+    return mvu_int_pallas(a, w, thresholds, out_scale, interpret=default_interpret())
+
+
+def mvu(
+    a: jax.Array,
+    w: jax.Array,
+    mode: str = "standard",
+    *,
+    k_bits: int | None = None,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    backend: str = "pallas",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    block_kw: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Matrix-vector(-batch) compute: epilogue(A . W^T).
+
+    Shapes: standard/binary: a (M, K), w (N, K). xnor: packed a (M, Wd)
+    uint32, w (N, Wd) uint32 with ``k_bits`` true synapses.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if interpret is None:
+        interpret = default_interpret()
+
+    if backend == "xla":
+        if mode == "xnor":
+            assert k_bits is not None
+            return ref.mvu_xnor_ref(a, w, k_bits, thresholds, out_scale)
+        if mode == "binary":
+            return ref.mvu_binary_ref(a, w, thresholds, out_scale)
+        return ref.mvu_int_ref(a, w, thresholds, out_scale)
+
+    if mode == "xnor":
+        assert k_bits is not None, "xnor mode requires k_bits"
+        return mvu_xnor_pallas(
+            a, w, k_bits, thresholds, out_scale,
+            block_m=block_m, block_n=block_n, block_kw=block_kw,
+            interpret=interpret,
+        )
+    if mode == "binary":
+        return mvu_binary_pallas(
+            a, w, thresholds, out_scale,
+            block_m=block_m, block_n=block_n, block_k=block_k,
+            interpret=interpret,
+        )
+    return mvu_int_pallas(
+        a, w, thresholds, out_scale,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        interpret=interpret,
+    )

@@ -1,0 +1,69 @@
+"""Bit-packing helpers for the XNOR-popcount MVU datapath.
+
+FINN's 1-bit SIMD lanes consume one synapse per wire; on TPU the natural
+"wire bundle" is a 32-bit VPU lane. We pack 32 binary synapses per uint32
+word, LSB-first, so one packed word corresponds to SIMD=32 FINN lanes.
+
+Bipolar convention (paper Fig. 4a): a stored bit b encodes the value
+(2b - 1) in {-1, +1}.  For two packed operands the dot product over K bits is
+
+    dot = 2 * popcount(~(a ^ w)) - K          (XNOR + popcount)
+
+Padding: packing pads K up to a multiple of 32 with zero bits.  Zero pads in
+*both* operands each contribute xnor(0,0)=1 to the popcount, so the identity
+above must use the *padded* K and subtract one extra per pad bit; callers use
+:func:`padded_bits` / keep the true K around (see kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+WORD_BITS = 32
+
+
+def padded_bits(k: int) -> int:
+    """K rounded up to a whole number of 32-bit words."""
+    return ((k + WORD_BITS - 1) // WORD_BITS) * WORD_BITS
+
+
+def num_words(k: int) -> int:
+    return padded_bits(k) // WORD_BITS
+
+
+def pack_bits(bits: jax.Array) -> jax.Array:
+    """Pack {0,1} integer array along the last axis into uint32 words.
+
+    (..., K) -> (..., ceil(K/32)), LSB-first within each word.
+    """
+    k = bits.shape[-1]
+    kp = padded_bits(k)
+    if kp != k:
+        pad = [(0, 0)] * (bits.ndim - 1) + [(0, kp - k)]
+        bits = jnp.pad(bits, pad)
+    bits = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], kp // WORD_BITS, WORD_BITS)
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_bits(words: jax.Array, count: int) -> jax.Array:
+    """Inverse of :func:`pack_bits`: (..., W) uint32 -> (..., count) int32 in {0,1}."""
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    return bits[..., :count].astype(jnp.int32)
+
+
+def popcount(x: jax.Array) -> jax.Array:
+    """Per-element number of set bits (int32 result)."""
+    return jax.lax.population_count(x).astype(jnp.int32)
+
+
+def bipolar_to_bits(x: jax.Array) -> jax.Array:
+    """Map {-1,+1} (or any sign) to the stored-bit convention {0,1}."""
+    return (x > 0).astype(jnp.int32)
+
+
+def bits_to_bipolar(b: jax.Array) -> jax.Array:
+    return (2 * b - 1).astype(jnp.int32)

@@ -1,0 +1,84 @@
+"""Pure-jnp oracles for every MVU kernel (the "golden model").
+
+All reference paths are written in the mathematically transparent form
+(unpack -> integer matmul -> epilogue) so the Pallas kernels can be checked
+for *exact* integer equality.
+
+Shapes follow the paper's GEMM view (Fig. 1):
+  activations A: (M, K)   -- M output pixels, K = Kd^2 * I_c synapses
+  weights     W: (N, K)   -- N = O_c output channels (one row per neuron)
+  output        : (M, N)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.thresholds import apply_thresholds
+from repro.kernels import packing
+
+
+def _epilogue(
+    acc: jax.Array,
+    thresholds: jax.Array | None,
+    out_scale: jax.Array | None,
+) -> jax.Array:
+    if thresholds is not None:
+        return apply_thresholds(acc, thresholds)
+    if out_scale is not None:
+        return acc.astype(jnp.float32) * out_scale
+    return acc
+
+
+def mvu_xnor_ref(
+    a_packed: jax.Array,
+    w_packed: jax.Array,
+    k_bits: int,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+) -> jax.Array:
+    """XNOR-popcount MVU oracle on *packed* operands.
+
+    a_packed: (M, Wd) uint32, w_packed: (N, Wd) uint32; both packed with
+    :func:`packing.pack_bits` (zero pad bits).  Implements the bipolar dot
+    product over the true K = ``k_bits`` synapses.
+    """
+    m, wd = a_packed.shape
+    a_bits = packing.unpack_bits(a_packed, k_bits)  # (M, K) {0,1}
+    w_bits = packing.unpack_bits(w_packed, k_bits)  # (N, K)
+    a = packing.bits_to_bipolar(a_bits)
+    w = packing.bits_to_bipolar(w_bits)
+    acc = jax.lax.dot_general(
+        a, w, (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32
+    )
+    return _epilogue(acc, thresholds, out_scale)
+
+
+def mvu_binary_ref(
+    a: jax.Array,
+    w_bits: jax.Array,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Binary-weight MVU oracle: a (M, K) int, w_bits (N, K) in {0,1} ~ {-1,+1}."""
+    w = packing.bits_to_bipolar(w_bits.astype(jnp.int32))
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32), w, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return _epilogue(acc, thresholds, out_scale)
+
+
+def mvu_int_ref(
+    a: jax.Array,
+    w: jax.Array,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Standard (arbitrary-precision) MVU oracle: int x int -> int32 matmul."""
+    acc = jax.lax.dot_general(
+        a.astype(jnp.int32), w.astype(jnp.int32), (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    return _epilogue(acc, thresholds, out_scale)

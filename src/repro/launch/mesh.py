@@ -1,0 +1,29 @@
+"""Production meshes.
+
+Single pod: (16, 16) ("data", "model") = 256 chips (TPU v5e pod).
+Multi-pod:  (2, 16, 16) ("pod", "data", "model") = 512 chips.
+
+Defined as functions so importing this module never touches jax device
+state (the dry-run sets XLA_FLAGS *before* any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over host (CPU) devices for tests/examples."""
+    return jax.make_mesh(shape, axes)
+
+
+def data_axes(mesh) -> tuple[str, ...]:
+    """Axes the batch is sharded over (pod folds into data-parallelism)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)

@@ -1,0 +1,95 @@
+"""Serving driver: sharded prefill + decode steps, batched request loop.
+
+``shard_serve_fns`` builds the two jitted entry points the dry-run lowers
+for the decode_* and long_* shapes; ``serve_loop`` is a host-scale batched
+continuous-serving simulation (requests arrive, get batched, prefilled,
+and decoded to completion) used by examples/serve_lm.py.
+
+Long-context SP: with ``seq_over_model=True`` the KV cache's sequence dim
+shards over "model" and GSPMD inserts the partial-softmax combine
+(flash-decode style) -- used for the long_500k cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import batch_pspec, cache_pspecs, param_shardings
+from repro.models.model import Model
+
+
+def shard_serve_fns(model: Model, mesh, batch: int, max_len: int,
+                    *, seq_over_model: bool = False):
+    """Returns (prefill_fn, decode_fn, params_sharding, state_sharding)."""
+    params_shape = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+    p_shard = param_shardings(mesh, params_shape)
+    state_shape = jax.eval_shape(lambda: model.init_decode_state(batch, max_len))
+    s_shard = cache_pspecs(mesh, state_shape, seq_over_model=seq_over_model)
+    tok_shard = jax.sharding.NamedSharding(mesh, batch_pspec(mesh))
+
+    prefill = jax.jit(
+        model.prefill,
+        in_shardings=(p_shard, None, s_shard),
+        out_shardings=(None, s_shard),
+    )
+    decode = jax.jit(
+        model.decode_step,
+        in_shardings=(
+            p_shard,
+            s_shard,
+            jax.sharding.NamedSharding(
+                mesh, jax.sharding.PartitionSpec(batch_pspec(mesh)[0])
+            ),
+        ),
+        out_shardings=(None, s_shard),
+        donate_argnums=(1,),
+    )
+    return prefill, decode, p_shard, s_shard
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray  # (S,) int32
+    max_new: int
+    out: list = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_done: float = 0.0
+
+
+def serve_loop(model: Model, params, requests: list[Request], *,
+               batch: int = 4, max_len: int = 256, greedy: bool = True):
+    """Static-batched serving: groups requests into batches, prefills the
+    (right-padded) prompts, then decodes all sequences in lockstep."""
+    done: list[Request] = []
+    for i in range(0, len(requests), batch):
+        group = requests[i : i + batch]
+        while len(group) < batch:
+            group.append(Request(rid=-1, prompt=group[0].prompt, max_new=group[0].max_new))
+        s = max(len(r.prompt) for r in group)
+        toks = np.zeros((batch, s), np.int32)
+        for j, r in enumerate(group):
+            toks[j, : len(r.prompt)] = r.prompt  # left-aligned prompts
+        state = model.init_decode_state(batch, max_len)
+        t0 = time.perf_counter()
+        logits, state = model.prefill(params, {"tokens": jnp.asarray(toks)}, state)
+        nxt = jnp.argmax(logits, -1) if greedy else logits.argmax(-1)
+        max_new = max(r.max_new for r in group)
+        for _ in range(max_new):
+            for j, r in enumerate(group):
+                if r.rid >= 0 and len(r.out) < r.max_new:
+                    r.out.append(int(nxt[j]))
+            logits, state = model.decode_step(params, state, nxt)
+            nxt = jnp.argmax(logits, -1)
+        t1 = time.perf_counter()
+        for r in group:
+            if r.rid >= 0:
+                r.t_done = t1 - t0
+                done.append(r)
+    return done

@@ -1,0 +1,64 @@
+"""Assigned input-shape sets and the (arch x shape) cell matrix.
+
+    train_4k     seq 4,096   global_batch 256   -> train_step
+    prefill_32k  seq 32,768  global_batch 32    -> prefill (serve)
+    decode_32k   seq 32,768  global_batch 128   -> decode_step (one token,
+                                                   KV cache of seq_len)
+    long_500k    seq 524,288 global_batch 1     -> decode_step; requires a
+                                                   sub-quadratic arch
+
+long_500k is SKIPPED for pure full-attention archs (yi-9b, command-r-plus,
+nemotron-4, qwen2-vl, granite-moe, qwen3-moe, whisper) per the assignment;
+it RUNS for h2o-danube (SWA), mamba2 (attn-free) and jamba (hybrid).
+Skips are recorded in the dry-run table, justification in DESIGN.md
+section Arch-applicability.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.configs import ARCH_IDS, get_config
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str  # train | prefill | decode
+    seq_len: int
+    global_batch: int
+
+
+SHAPES = {
+    "train_4k": ShapeSpec("train_4k", "train", 4096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524288, 1),
+}
+
+
+def applicable_shapes(arch: str) -> list[str]:
+    cfg = get_config(arch)
+    names = ["train_4k", "prefill_32k", "decode_32k"]
+    if cfg.subquadratic:
+        names.append("long_500k")
+    return names
+
+
+def skip_reason(arch: str, shape: str) -> str | None:
+    cfg = get_config(arch)
+    if shape == "long_500k" and not cfg.subquadratic:
+        return "pure full-attention arch (no sub-quadratic path); skip per assignment"
+    return None
+
+
+def all_cells() -> list[tuple[str, str]]:
+    return [(a, s) for a in ARCH_IDS for s in applicable_shapes(a)]
+
+
+def all_cells_with_skips() -> list[tuple[str, str, str | None]]:
+    out = []
+    for a in ARCH_IDS:
+        for s in SHAPES:
+            out.append((a, s, skip_reason(a, s)))
+    return out

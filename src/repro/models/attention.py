@@ -1,0 +1,234 @@
+"""Attention: MHA/GQA/MQA, causal + sliding-window masks, RoPE/M-RoPE,
+prefill and single-token decode with a KV cache, encoder-decoder cross
+attention.  Pure einsum formulation so GSPMD can shard heads over "model"
+and (for long-context decode) the KV sequence over "data".
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import (
+    Params,
+    apply_mrope,
+    apply_rope,
+    linear,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+)
+
+
+def attn_init(key, cfg, dtype=jnp.bfloat16) -> Params:
+    hd = cfg.head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": linear_init(ks[0], cfg.d_model, cfg.num_heads * hd, dtype),
+        "wk": linear_init(ks[1], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wv": linear_init(ks[2], cfg.d_model, cfg.num_kv_heads * hd, dtype),
+        "wo": linear_init(ks[3], cfg.num_heads * hd, cfg.d_model, dtype),
+    }
+    if cfg.qk_norm:
+        p["qnorm"] = rmsnorm_init(hd, dtype)
+        p["knorm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _qkv(p, cfg, x, positions, backend):
+    b, s, _ = x.shape
+    hd = cfg.head_dim
+    q = _split_heads(linear(p["wq"], x, backend=backend), cfg.num_heads, hd)
+    k = _split_heads(linear(p["wk"], x, backend=backend), cfg.num_kv_heads, hd)
+    v = _split_heads(linear(p["wv"], x, backend=backend), cfg.num_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(p["qnorm"], q)
+        k = rmsnorm(p["knorm"], k)
+    if cfg.mrope:
+        if positions.ndim == 2:  # text-only fallback: identical t/h/w ids
+            positions = jnp.broadcast_to(positions[None], (3, *positions.shape))
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    elif cfg.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _mask(sq: int, skv: int, *, causal: bool, window: int | None,
+          q_offset: int = 0) -> jax.Array:
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(skv)[None, :]
+    m = jnp.ones((sq, skv), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+def _sdpa(q, k, v, mask=None):
+    """q (B,Sq,H,hd); k,v (B,Skv,G,hd) with H = G*rep (GQA)."""
+    b, sq, h, hd = q.shape
+    g = k.shape[2]
+    rep = h // g
+    q = q.reshape(b, sq, g, rep, hd)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", q, k).astype(jnp.float32)
+    scores = scores / jnp.sqrt(hd).astype(jnp.float32)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _sdpa_chunked(q, k, v, *, causal, window, q_chunk):
+    """Exact attention scanned over query chunks: peak score memory drops
+    from O(S^2) to O(q_chunk * S) and the backward pass rematerializes per
+    chunk.  The TPU-native answer to the paper's input-buffer discipline:
+    stream the query stripe, keep K/V resident."""
+    b, s, h, hd = q.shape
+    nc = s // q_chunk
+    qc = jnp.moveaxis(q.reshape(b, nc, q_chunk, h, hd), 1, 0)  # (nc, b, qc, h, hd)
+
+    def body(_, inp):
+        qi, idx = inp
+        mask = _mask(q_chunk, s, causal=causal, window=window,
+                     q_offset=idx * q_chunk)
+        return None, _sdpa(qi, k, v, mask)
+
+    _, outs = jax.lax.scan(body, None, (qc, jnp.arange(nc)))
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, hd)
+
+
+def _sdpa_auto(q, k, v, *, causal, window, q_chunk):
+    s = q.shape[1]
+    if q_chunk and s > q_chunk and s % q_chunk == 0 and q.shape[1] == k.shape[1]:
+        return _sdpa_chunked(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
+    mask = _mask(s, k.shape[1], causal=causal, window=window)
+    return _sdpa(q, k, v, mask if (causal or window) else None)
+
+
+def attention(
+    p: Params,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    positions: jax.Array,  # (B, S) or (3, B, S) for M-RoPE
+    *,
+    causal: bool = True,
+    backend: str = "dense",
+) -> jax.Array:
+    q, k, v = _qkv(p, cfg, x, positions, backend)
+    window = cfg.window if cfg.attn_type == "swa" else None
+    out = _sdpa_auto(q, k, v, causal=causal, window=window,
+                     q_chunk=cfg.attn_q_chunk)
+    return linear(p["wo"], out.reshape(*x.shape[:-1], -1), backend=backend)
+
+
+# ------------------------------------------------------------------ decode
+def _quant_kv(x):
+    """(.., hd) -> int8 values + per-(token,head) f32 scale (KIVI-style)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant_kv(q, scale, dtype):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    shape = (batch, max_len, cfg.num_kv_heads, cfg.head_dim)
+    if cfg.kv_quant:
+        return {
+            "k": jnp.zeros(shape, jnp.int8),
+            "v": jnp.zeros(shape, jnp.int8),
+            "k_scale": jnp.zeros((*shape[:-1], 1), jnp.float32),
+            "v_scale": jnp.zeros((*shape[:-1], 1), jnp.float32),
+        }
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def _cache_write(cfg, cache, k, v, idx):
+    if cfg.kv_quant:
+        kq, ks = _quant_kv(k)
+        vq, vs = _quant_kv(v)
+        return {
+            "k": jax.lax.dynamic_update_slice(cache["k"], kq, (0, idx, 0, 0)),
+            "v": jax.lax.dynamic_update_slice(cache["v"], vq, (0, idx, 0, 0)),
+            "k_scale": jax.lax.dynamic_update_slice(cache["k_scale"], ks, (0, idx, 0, 0)),
+            "v_scale": jax.lax.dynamic_update_slice(cache["v_scale"], vs, (0, idx, 0, 0)),
+        }
+    return {
+        "k": jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype), (0, idx, 0, 0)),
+        "v": jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype), (0, idx, 0, 0)),
+    }
+
+
+def _cache_read(cfg, cache, dtype):
+    if cfg.kv_quant:
+        return (_dequant_kv(cache["k"], cache["k_scale"], dtype),
+                _dequant_kv(cache["v"], cache["v_scale"], dtype))
+    return cache["k"], cache["v"]
+
+
+def attention_prefill(
+    p: Params, cfg, x: jax.Array, positions: jax.Array, cache, *,
+    backend: str = "dense",
+):
+    """Full-sequence pass that also fills the KV cache (serving prefill)."""
+    q, k, v = _qkv(p, cfg, x, positions, backend)
+    cache = _cache_write(cfg, cache, k, v, 0)
+    window = cfg.window if cfg.attn_type == "swa" else None
+    out = _sdpa_auto(q, k, v, causal=True, window=window,
+                     q_chunk=cfg.attn_q_chunk)
+    return linear(p["wo"], out.reshape(*x.shape[:-1], -1), backend=backend), cache
+
+
+def attention_decode(
+    p: Params, cfg, x: jax.Array, pos: jax.Array, cache, *,
+    backend: str = "dense",
+):
+    """One-token decode: x (B, 1, d), pos (B, 1); cache (B, T, G, hd)."""
+    q, k, v = _qkv(p, cfg, x, pos, backend)
+    b, t = cache["k"].shape[:2]
+    # write the new K/V at position pos (same for all batch rows in this
+    # framework: right-aligned serving) then attend over the full cache.
+    idx = pos[0, 0]
+    cache = _cache_write(cfg, cache, k, v, idx)
+    kk, vv = _cache_read(cfg, cache, q.dtype)
+    valid = jnp.arange(t)[None, :] <= idx  # (1, T)
+    if cfg.attn_type == "swa" and cfg.window is not None:
+        valid &= jnp.arange(t)[None, :] > idx - cfg.window
+    g = kk.shape[2]
+    h = cfg.num_heads
+    rep = h // g
+    qh = q.reshape(b, 1, g, rep, cfg.head_dim)
+    scores = jnp.einsum("bsgrh,btgh->bgrst", qh, kk).astype(jnp.float32)
+    scores = scores / jnp.sqrt(cfg.head_dim).astype(jnp.float32)
+    scores = jnp.where(valid[:, None, None, None], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bgrst,btgh->bsgrh", probs, vv).reshape(b, 1, h * cfg.head_dim)
+    return linear(p["wo"], out, backend=backend), cache
+
+
+# ------------------------------------------------------------------ cross
+def cross_attn_init(key, cfg, dtype=jnp.bfloat16) -> Params:
+    return attn_init(key, cfg, dtype)
+
+
+def cross_attention(
+    p: Params, cfg, x: jax.Array, kv_src: jax.Array, *, backend: str = "dense"
+) -> jax.Array:
+    """Decoder query over encoder memory (Whisper); no mask, no rope."""
+    hd = cfg.head_dim
+    q = _split_heads(linear(p["wq"], x, backend=backend), cfg.num_heads, hd)
+    k = _split_heads(linear(p["wk"], kv_src, backend=backend), cfg.num_kv_heads, hd)
+    v = _split_heads(linear(p["wv"], kv_src, backend=backend), cfg.num_kv_heads, hd)
+    out = _sdpa(q, k, v, None)
+    return linear(p["wo"], out.reshape(*x.shape[:-1], -1), backend=backend)

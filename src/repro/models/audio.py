@@ -1,0 +1,15 @@
+"""Whisper backbone support: conv-stem stub.
+
+The paper assignment specifies the transformer BACKBONE only; the mel ->
+conv1d x2 frontend is a STUB that provides precomputed frame embeddings
+(B, T_frames, d_model) directly to the encoder.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def conv_frontend_stub(batch: int, n_frames: int, d_model: int, dtype=jnp.bfloat16):
+    """Stand-in for log-mel + 2x strided conv1d stem."""
+    return jnp.zeros((batch, n_frames, d_model), dtype)

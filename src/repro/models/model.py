@@ -1,0 +1,178 @@
+"""Model facade: build(config) -> init / loss / prefill / decode_step.
+
+One uniform interface over all ten architectures:
+
+    batch (train):
+      LM/MoE/SSM/hybrid: {"tokens": (B, S+1) int32}
+      vlm:    + {"prefix_embeds": (B, P, d)}
+      audio:  {"enc_embeds": (B, T, d), "tokens": (B, S+1)}
+
+    decode state: {"caches": ..., "pos": (B, 1) int32, ["enc_out"]}
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as tf
+from repro.models.layers import embed, embed_init, linear, linear_init, unembed
+from repro.models.vlm import mrope_positions
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable[..., Any]
+    loss: Callable[..., Any]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_decode_state: Callable[..., Any]
+
+
+def _positions(cfg, batch, seq, prefix=0):
+    if cfg.mrope:
+        return mrope_positions(batch, prefix, seq)
+    return jnp.broadcast_to(
+        jnp.arange(prefix + seq, dtype=jnp.int32)[None], (batch, prefix + seq)
+    )
+
+
+def _ce_loss(logits: jax.Array, targets: jax.Array) -> jax.Array:
+    logits = logits.astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def build(cfg: ModelConfig) -> Model:
+    dt = _dtype(cfg)
+
+    # ----------------------------------------------------------------- init
+    def init(key: jax.Array):
+        k_emb, k_stack, k_out = jax.random.split(key, 3)
+        params = {"embed": embed_init(k_emb, cfg.vocab_size, cfg.d_model, dt)}
+        if cfg.encdec:
+            params["encdec"] = tf.encdec_init(k_stack, cfg, dt)
+        else:
+            params["layers"] = tf.stack_init(k_stack, cfg, dt)
+        params["ln_f"] = (
+            tf.layernorm_init(cfg.d_model, dt)
+            if cfg.norm == "layernorm"
+            else tf.rmsnorm_init(cfg.d_model, dt)
+        )
+        if not cfg.tie_embeddings:
+            params["unembed"] = linear_init(k_out, cfg.d_model, cfg.vocab_size, dt)
+        return params
+
+    def _norm_f(params, x):
+        from repro.models.layers import layernorm, rmsnorm
+
+        fn = layernorm if cfg.norm == "layernorm" else rmsnorm
+        return fn(params["ln_f"], x, cfg.norm_eps)
+
+    def _logits(params, x):
+        if cfg.tie_embeddings:
+            return unembed(params["embed"], x)
+        return linear(params["unembed"], x)
+
+    # ----------------------------------------------------------------- loss
+    def loss(params, batch):
+        tokens = batch["tokens"]
+        inputs, targets = tokens[:, :-1], tokens[:, 1:]
+        b, s = inputs.shape
+        x = embed(params["embed"], inputs)
+
+        if cfg.encdec:
+            enc_in = batch["enc_embeds"].astype(dt)
+            enc_pos = _positions(cfg, b, enc_in.shape[1])
+            enc_out = tf.encoder_forward(params["encdec"], cfg, enc_in, enc_pos)
+            pos = _positions(cfg, b, s)
+            x = tf.decoder_forward(params["encdec"], cfg, x, pos, enc_out)
+            aux = jnp.zeros((), jnp.float32)
+        elif cfg.family == "vlm" and "prefix_embeds" in batch:
+            prefix = batch["prefix_embeds"].astype(dt)
+            p_len = prefix.shape[1]
+            x = jnp.concatenate([prefix, x], axis=1)
+            pos = _positions(cfg, b, s, prefix=p_len)
+            x, aux = tf.stack_forward(params["layers"], cfg, x, pos)
+            x = x[:, p_len:]
+        else:
+            pos = _positions(cfg, b, s)
+            x, aux = tf.stack_forward(params["layers"], cfg, x, pos)
+
+        logits = _logits(params, _norm_f(params, x))
+        ce = _ce_loss(logits, targets)
+        total = ce + cfg.aux_loss_weight * aux
+        return total, {"ce": ce, "aux": aux}
+
+    # ------------------------------------------------------------- serving
+    def init_decode_state(batch: int, max_len: int):
+        state: dict[str, Any] = {"pos": jnp.zeros((batch, 1), jnp.int32)}
+        if cfg.encdec:
+            state["caches"] = jax.vmap(
+                lambda _: tf.init_kv_cache(cfg, batch, max_len, dt)
+            )(jnp.arange(cfg.num_layers))
+            state["enc_out"] = jnp.zeros((batch, 1, cfg.d_model), dt)  # placeholder
+        else:
+            state["caches"] = tf.init_stack_caches(cfg, batch, max_len, dt)
+        return state
+
+    def prefill(params, batch, state):
+        """Process the full prompt; returns (last-token logits, state)."""
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed(params["embed"], tokens)
+        if cfg.encdec:
+            enc_in = batch["enc_embeds"].astype(dt)
+            enc_pos = _positions(cfg, b, enc_in.shape[1])
+            enc_out = tf.encoder_forward(params["encdec"], cfg, enc_in, enc_pos)
+            pos = _positions(cfg, b, s)
+            # teacher-forced pass filling self-attn caches
+            def body(h, scanned):
+                p, cache = scanned
+                from repro.models.attention import attention_prefill, cross_attention
+
+                y, cache = attention_prefill(
+                    p["attn"], cfg, tf._norm(cfg, p["ln1"], h), pos, cache,
+                    backend=cfg.linear_backend)
+                h = h + y
+                h = h + cross_attention(p["xattn"], cfg, tf._norm(cfg, p["lnx"], h),
+                                        enc_out, backend=cfg.linear_backend)
+                h = h + tf.ffn(p["ffn"], cfg, tf._norm(cfg, p["ln2"], h),
+                               backend=cfg.linear_backend)
+                return h, cache
+
+            x, caches = jax.lax.scan(body, x, (params["encdec"]["dec"], state["caches"]))
+            state = {**state, "caches": caches, "enc_out": enc_out,
+                     "pos": jnp.full((b, 1), s, jnp.int32)}
+        else:
+            pos = _positions(cfg, b, s)
+            x, caches = tf.stack_prefill(params["layers"], cfg, x, pos, state["caches"])
+            state = {**state, "caches": caches, "pos": jnp.full((b, 1), s, jnp.int32)}
+        logits = _logits(params, _norm_f(params, x[:, -1:]))
+        return logits[:, 0], state
+
+    def decode_step(params, state, tokens):
+        """tokens (B,) -> (logits (B, V), new state); one step, KV cache."""
+        b = tokens.shape[0]
+        x = embed(params["embed"], tokens[:, None])
+        pos = state["pos"]
+        if cfg.encdec:
+            x, caches = tf.decoder_decode(params["encdec"], cfg, x, pos,
+                                          state["caches"], state["enc_out"])
+        else:
+            x, caches = tf.stack_decode(params["layers"], cfg, x, pos, state["caches"])
+        logits = _logits(params, _norm_f(params, x))
+        new_state = {**state, "caches": caches, "pos": pos + 1}
+        return logits[:, 0], new_state
+
+    return Model(cfg, init, loss, prefill, decode_step, init_decode_state)

@@ -1,0 +1,114 @@
+"""Mixture-of-Experts FFN: top-k routing with capacity-grouped one-hot
+dispatch (GShard/Switch style), expressed as einsums so GSPMD shards the
+expert dimension over the "model" mesh axis (expert parallelism).
+
+Tokens are processed in groups of ``group_size``; each expert owns
+``capacity = group_size * top_k * capacity_factor / num_experts`` slots per
+group.  Overflow tokens are dropped (their residual stream passes through),
+the standard dropping-MoE training formulation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, activation, is_gated, linear_init
+
+
+def moe_init(key, cfg, dtype=jnp.bfloat16) -> Params:
+    e, d, f = cfg.num_experts, cfg.d_model, cfg.moe_d_ff
+    ks = jax.random.split(key, 4)
+    scale = 1.0 / jnp.sqrt(d)
+    p = {
+        "router": linear_init(ks[0], d, e, jnp.float32),
+        "w_up": (jax.random.normal(ks[1], (e, d, f)) * scale).astype(dtype),
+        "w_down": (jax.random.normal(ks[2], (e, f, d)) * (1.0 / jnp.sqrt(f))).astype(dtype),
+    }
+    if is_gated(cfg.activation):
+        p["w_gate"] = (jax.random.normal(ks[3], (e, d, f)) * scale).astype(dtype)
+    return p
+
+
+def _capacity(group: int, e: int, k: int, factor: float) -> int:
+    return max(4, int(group * k * factor / e))
+
+
+def route_topk(logits: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """(T, E) -> (weights (T, k), idx (T, k)); weights renormalized softmax."""
+    vals, idx = jax.lax.top_k(logits, k)
+    w = jax.nn.softmax(vals.astype(jnp.float32), axis=-1)
+    return w, idx
+
+
+def dispatch_combine(
+    idx: jax.Array,  # (G, k) expert ids per token in group
+    weights: jax.Array,  # (G, k)
+    e: int,
+    capacity: int,
+):
+    """Build one-hot dispatch (G, E, C) bool-ish and combine (G, E, C) f32."""
+    g, k = idx.shape
+    dispatch = jnp.zeros((g, e, capacity), jnp.bfloat16)
+    combine = jnp.zeros((g, e, capacity), jnp.float32)
+    counts = jnp.zeros((e,), jnp.int32)
+    for j in range(k):  # k is small and static
+        onehot = jax.nn.one_hot(idx[:, j], e, dtype=jnp.int32)  # (G, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + counts[None, :]  # (G, E)
+        keep = (pos < capacity) & (onehot > 0)
+        pos_c = jax.nn.one_hot(pos, capacity, dtype=jnp.bfloat16)  # (G, E, C)
+        sel = pos_c * keep[..., None].astype(jnp.bfloat16)
+        dispatch = dispatch + sel
+        combine = combine + sel.astype(jnp.float32) * weights[:, j, None, None]
+        counts = counts + jnp.sum(onehot * keep.astype(jnp.int32), axis=0)
+    return dispatch, combine
+
+
+def load_balancing_loss(logits: jax.Array, idx: jax.Array, e: int) -> jax.Array:
+    """Switch-style aux loss: E * sum_e (fraction routed) * (mean prob)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)  # (T, E)
+    frac = jnp.mean(
+        jax.nn.one_hot(idx[..., 0], e, dtype=jnp.float32), axis=0
+    )  # top-1 routed fraction
+    return e * jnp.sum(frac * jnp.mean(probs, axis=0))
+
+
+def moe_ffn(
+    p: Params,
+    cfg,
+    x: jax.Array,  # (B, S, d)
+    *,
+    group_size: int = 512,
+    capacity_factor: float = 1.25,
+    backend: str = "dense",
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (output (B,S,d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.num_experts_per_tok
+    t = b * s
+    g = min(group_size, t)
+    n_groups = t // g
+    xt = x.reshape(n_groups, g, d)
+
+    logits = jnp.einsum("ngd,de->nge", xt.astype(jnp.float32), p["router"]["w"])
+    weights, idx = route_topk(logits.reshape(-1, e), k)
+    aux = load_balancing_loss(logits.reshape(-1, e), idx, e)
+    weights = weights.reshape(n_groups, g, k)
+    idx = idx.reshape(n_groups, g, k)
+
+    cap = _capacity(g, e, k, capacity_factor)
+    dispatch, combine = jax.vmap(
+        lambda i, w: dispatch_combine(i, w, e, cap)
+    )(idx, weights)  # (n, G, E, C) each
+
+    # expert inputs: (n, E, C, d); experts sharded over "model" via e-dim
+    xe = jnp.einsum("ngec,ngd->necd", dispatch, xt.astype(jnp.bfloat16))
+    up = jnp.einsum("necd,edf->necf", xe, p["w_up"])
+    if is_gated(cfg.activation):
+        gate = jnp.einsum("necd,edf->necf", xe, p["w_gate"])
+        h = activation(cfg.activation, gate, up)
+    else:
+        h = activation(cfg.activation, up)
+    ye = jnp.einsum("necf,efd->necd", h, p["w_down"])
+    out = jnp.einsum("ngec,necd->ngd", combine.astype(ye.dtype), ye)
+    return out.reshape(b, s, d).astype(x.dtype), aux.astype(jnp.float32)

@@ -1,0 +1,289 @@
+"""Mamba-2: the SSD (state-space duality) layer [arXiv:2405.21060].
+
+Chunked SSD for training/prefill (quadratic attention-like term inside
+chunks, linear recurrence across chunk states) and the O(1)-per-token
+recurrent form for decode.
+
+Projections are stored *unfused* (w_z / w_x / w_B / w_C / w_dt and a
+per-segment depthwise conv) so tensor parallelism shards heads cleanly over
+the "model" mesh axis: z/x/dt columns and A/D/dt_bias/state head dims are
+all multiples of the head count; B/C (ngroups * dstate) stay replicated.
+XLA re-fuses the matmuls; GSPMD never has to split a fused projection at
+segment boundaries.
+
+Shapes (mamba2-780m): d_model 1536, expand 2 -> d_inner 3072, headdim 64 ->
+48 heads, ngroups 1, dstate 128, conv kernel 4.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import Params, linear, linear_init, rmsnorm
+
+NEG_INF = -1e30
+
+
+def ssm_dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = d_inner // cfg.ssm_headdim
+    conv_dim = d_inner + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_inner, nheads, conv_dim
+
+
+def ssm_init(key, cfg, dtype=jnp.bfloat16) -> Params:
+    d_inner, nheads, _ = ssm_dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    ks = jax.random.split(key, 7)
+    conv = lambda k, c: (jax.random.normal(k, (cfg.ssm_conv, c)) * 0.2).astype(dtype)
+    return {
+        "w_z": linear_init(ks[0], cfg.d_model, d_inner, dtype),
+        "w_x": linear_init(ks[1], cfg.d_model, d_inner, dtype),
+        "w_B": linear_init(ks[2], cfg.d_model, gn, dtype),
+        "w_C": linear_init(ks[3], cfg.d_model, gn, dtype),
+        "w_dt": linear_init(ks[4], cfg.d_model, nheads, dtype),
+        "conv_x": {"w": conv(ks[5], d_inner), "b": jnp.zeros((d_inner,), dtype)},
+        "conv_B": {"w": conv(ks[6], gn), "b": jnp.zeros((gn,), dtype)},
+        "conv_C": {"w": conv(ks[6], gn), "b": jnp.zeros((gn,), dtype)},
+        "A_log": jnp.log(jnp.arange(1, nheads + 1, dtype=jnp.float32)),
+        "D": jnp.ones((nheads,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nheads,), 0.01, jnp.float32))),
+        "norm": {"scale": jnp.ones((d_inner,), dtype)},
+        "out_proj": linear_init(ks[4], d_inner, cfg.d_model, dtype),
+    }
+
+
+def _segsum(a: jax.Array) -> jax.Array:
+    """(..., q) -> (..., q, q): s[i,j] = sum_{j<t<=i} a[t], -inf above diag."""
+    q = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    d = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((q, q), bool), k=0)
+    return jnp.where(mask, d, NEG_INF)
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv1d + SiLU: x (B, S, C), w (K, C)."""
+    k = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),  # (K, 1, C) HIO
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=w.shape[1],
+    )
+    return (jax.nn.silu(out + b.astype(jnp.float32))).astype(x.dtype)
+
+
+def _conv_step(win: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """One-token conv: win (B, K, C) -> (B, C)."""
+    out = jnp.einsum("bkc,kc->bc", win.astype(jnp.float32), w.astype(jnp.float32))
+    return jax.nn.silu(out + b.astype(jnp.float32))
+
+
+def ssd_chunked(
+    x: jax.Array,  # (B, S, H, P)
+    dt: jax.Array,  # (B, S, H) softplus'd
+    a_log: jax.Array,  # (H,)
+    b_mat: jax.Array,  # (B, S, G, N)
+    c_mat: jax.Array,  # (B, S, G, N)
+    chunk: int = 128,
+    init_state: jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Returns (y (B,S,H,P), final_state (B,H,P,N))."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc = sp // chunk
+    rep = h // g  # heads per B/C group
+
+    a = -jnp.exp(a_log)  # (H,) negative
+    da = dt * a[None, None, :]  # (B, S, H) log-decay per step
+    xdt = x * dt[..., None]  # (B, S, H, P) dt-scaled input
+
+    chv = lambda t: t.reshape(bsz, nc, chunk, *t.shape[2:])
+    xc, dac = chv(xdt), chv(da)
+    bc, cc = chv(b_mat), chv(c_mat)
+    dac_h = jnp.moveaxis(dac, -1, 2)  # (B, nc, H, q)
+
+    # 1) intra-chunk (diagonal) term
+    lmat = jnp.exp(_segsum(dac_h))  # (B, nc, H, q, q)
+    bh = jnp.repeat(bc, rep, axis=3)  # (B, nc, q, H, N)
+    ch = jnp.repeat(cc, rep, axis=3)
+    y_diag = jnp.einsum(
+        "bcqhn,bckhn,bchqk,bckhp->bcqhp",
+        ch.astype(jnp.float32), bh.astype(jnp.float32), lmat,
+        xc.astype(jnp.float32),
+    )
+
+    # 2) chunk-final states
+    a_cum = jnp.cumsum(dac_h, axis=-1)  # (B, nc, H, q)
+    decay_states = jnp.exp(a_cum[..., -1:] - a_cum)
+    states = jnp.einsum(
+        "bckhn,bchk,bckhp->bchpn",
+        bh.astype(jnp.float32), decay_states, xc.astype(jnp.float32),
+    )  # (B, nc, H, P, N)
+
+    # 3) inter-chunk recurrence over chunk states (associative scan)
+    chunk_decay = jnp.exp(a_cum[..., -1])  # (B, nc, H)
+
+    def combine(left, right):
+        dl, sl = left
+        dr, sr = right
+        return dl * dr, sr + sl * dr[..., None, None]
+
+    if init_state is None:
+        init_state = jnp.zeros((bsz, h, p, n), jnp.float32)
+    _, st = jax.lax.associative_scan(combine, (chunk_decay, states), axis=1)
+    # st[c] = chunk-exit state with zero init; state *entering* chunk c is
+    # st[c-1] plus the initial state decayed through chunks 0..c-1.
+    tot_dec = jnp.cumprod(chunk_decay, axis=1)
+    init_in = jnp.concatenate(
+        [jnp.ones_like(tot_dec[:, :1]), tot_dec[:, :-1]], axis=1
+    )  # (B, nc, H)
+    prev = jnp.concatenate([jnp.zeros_like(st[:, :1]), st[:, :-1]], axis=1)
+    st_in = prev + init_in[..., None, None] * init_state[:, None]
+
+    # 4) inter-chunk (off-diagonal) output term
+    state_decay_out = jnp.exp(a_cum)  # (B, nc, H, q)
+    y_off = jnp.einsum(
+        "bcqhn,bchpn,bchq->bcqhp",
+        ch.astype(jnp.float32), st_in, state_decay_out,
+    )
+
+    y = (y_diag + y_off).reshape(bsz, sp, h, p)[:, :s]
+    final_state = st[:, -1] + tot_dec[:, -1][..., None, None] * init_state
+    return y, final_state
+
+
+def _project(p, cfg, x, be):
+    """x (B,S,d) -> (z, xs, B, C, dt_raw) with per-segment causal convs."""
+    d_inner, nheads, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    bsz, s, _ = x.shape
+    z = linear(p["w_z"], x, backend=be)
+    xs = _causal_conv(linear(p["w_x"], x, backend=be), p["conv_x"]["w"], p["conv_x"]["b"])
+    bm = _causal_conv(linear(p["w_B"], x, backend=be), p["conv_B"]["w"], p["conv_B"]["b"])
+    cm = _causal_conv(linear(p["w_C"], x, backend=be), p["conv_C"]["w"], p["conv_C"]["b"])
+    dt_raw = linear(p["w_dt"], x, backend=be)
+    xs = xs.reshape(bsz, s, nheads, cfg.ssm_headdim)
+    bm = bm.reshape(bsz, s, g, n)
+    cm = cm.reshape(bsz, s, g, n)
+    return z, xs, bm, cm, dt_raw
+
+
+def _finish(p, cfg, y, xs, z, be, bsz, s):
+    d_inner, _, _ = ssm_dims(cfg)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(bsz, s, d_inner).astype(z.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return linear(p["out_proj"], y, backend=be)
+
+
+def ssm_forward(
+    p: Params, cfg, x: jax.Array, *, chunk: int = 128, backend: str = "dense"
+) -> jax.Array:
+    """Full-sequence Mamba-2 block: x (B, S, d_model) -> (B, S, d_model)."""
+    bsz, s, _ = x.shape
+    z, xs, bm, cm, dt_raw = _project(p, cfg, x, backend)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y, _ = ssd_chunked(xs, dt, p["A_log"], bm, cm, chunk=chunk)
+    return _finish(p, cfg, y, xs, z, backend, bsz, s)
+
+
+def ssm_prefill(p: Params, cfg, x: jax.Array, *, chunk: int = 128,
+                backend: str = "dense"):
+    """Full-seq pass returning the decode cache (conv tails + final state)."""
+    bsz, s, _ = x.shape
+    kc = cfg.ssm_conv - 1
+    z = linear(p["w_z"], x, backend=backend)
+    x_pre = linear(p["w_x"], x, backend=backend)
+    b_pre = linear(p["w_B"], x, backend=backend)
+    c_pre = linear(p["w_C"], x, backend=backend)
+    xs = _causal_conv(x_pre, p["conv_x"]["w"], p["conv_x"]["b"])
+    bm = _causal_conv(b_pre, p["conv_B"]["w"], p["conv_B"]["b"])
+    cm = _causal_conv(c_pre, p["conv_C"]["w"], p["conv_C"]["b"])
+    dt_raw = linear(p["w_dt"], x, backend=backend)
+    d_inner, nheads, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    xs = xs.reshape(bsz, s, nheads, cfg.ssm_headdim)
+    bm = bm.reshape(bsz, s, g, n)
+    cm = cm.reshape(bsz, s, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y, state = ssd_chunked(xs, dt, p["A_log"], bm, cm, chunk=chunk)
+    out = _finish(p, cfg, y, xs, z, backend, bsz, s)
+    cache = {
+        "conv_x": x_pre[:, -kc:, :],
+        "conv_B": b_pre[:, -kc:, :],
+        "conv_C": c_pre[:, -kc:, :],
+        "state": state,
+    }
+    return out, cache
+
+
+# ------------------------------------------------------------------ decode
+def init_ssm_cache(cfg, batch: int, dtype=jnp.bfloat16):
+    d_inner, nheads, _ = ssm_dims(cfg)
+    gn = cfg.ssm_groups * cfg.ssm_state
+    kc = cfg.ssm_conv - 1
+    return {
+        "conv_x": jnp.zeros((batch, kc, d_inner), dtype),
+        "conv_B": jnp.zeros((batch, kc, gn), dtype),
+        "conv_C": jnp.zeros((batch, kc, gn), dtype),
+        "state": jnp.zeros((batch, nheads, cfg.ssm_headdim, cfg.ssm_state), jnp.float32),
+    }
+
+
+def ssm_decode_step(
+    p: Params, cfg, x: jax.Array, cache, *, backend: str = "dense"
+):
+    """x (B, 1, d_model) -> (y (B, 1, d_model), cache)."""
+    d_inner, nheads, _ = ssm_dims(cfg)
+    g, n = cfg.ssm_groups, cfg.ssm_state
+    bsz = x.shape[0]
+    xt = x[:, 0]
+    z = linear(p["w_z"], xt, backend=backend)
+    x_pre = linear(p["w_x"], xt, backend=backend)
+    b_pre = linear(p["w_B"], xt, backend=backend)
+    c_pre = linear(p["w_C"], xt, backend=backend)
+    dt_raw = linear(p["w_dt"], xt, backend=backend)
+
+    win_x = jnp.concatenate([cache["conv_x"], x_pre[:, None].astype(cache["conv_x"].dtype)], axis=1)
+    win_b = jnp.concatenate([cache["conv_B"], b_pre[:, None].astype(cache["conv_B"].dtype)], axis=1)
+    win_c = jnp.concatenate([cache["conv_C"], c_pre[:, None].astype(cache["conv_C"].dtype)], axis=1)
+    xs = _conv_step(win_x, p["conv_x"]["w"], p["conv_x"]["b"]).astype(x.dtype)
+    bm = _conv_step(win_b, p["conv_B"]["w"], p["conv_B"]["b"]).astype(x.dtype)
+    cm = _conv_step(win_c, p["conv_C"]["w"], p["conv_C"]["b"]).astype(x.dtype)
+
+    xs = xs.reshape(bsz, nheads, cfg.ssm_headdim)
+    bm = bm.reshape(bsz, g, n)
+    cm = cm.reshape(bsz, g, n)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt * a[None, :])  # (B, H)
+
+    rep = nheads // g
+    bh = jnp.repeat(bm, rep, axis=1)  # (B, H, N)
+    ch = jnp.repeat(cm, rep, axis=1)
+    state = cache["state"] * da[..., None, None] + (
+        dt[..., None, None]
+        * xs.astype(jnp.float32)[..., None]
+        * bh.astype(jnp.float32)[:, :, None, :]
+    )
+    y = jnp.einsum("bhpn,bhn->bhp", state, ch.astype(jnp.float32))
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(bsz, d_inner).astype(x.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z))
+    out = linear(p["out_proj"], y, backend=backend)
+    new_cache = {"conv_x": win_x[:, 1:], "conv_B": win_b[:, 1:],
+                 "conv_C": win_c[:, 1:], "state": state}
+    return out[:, None, :], new_cache

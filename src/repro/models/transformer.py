@@ -1,0 +1,413 @@
+"""Transformer assembly: uniform decoder stacks (dense/MoE/SSM), hybrid
+interleave (Jamba), and encoder-decoder (Whisper).  Layer stacks are scanned
+(stacked params) with optional remat; caches thread through the same scans
+for decode.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ssm as ssm_mod
+from repro.models.attention import (
+    attention,
+    attention_decode,
+    attention_prefill,
+    attn_init,
+    cross_attention,
+    init_kv_cache,
+)
+from repro.models.layers import (
+    Params,
+    activation,
+    is_gated,
+    layernorm,
+    layernorm_init,
+    linear,
+    linear_init,
+    rmsnorm,
+    rmsnorm_init,
+    seq_shard,
+)
+from repro.models.moe import moe_ffn, moe_init
+
+
+def _norm_init(cfg, dtype):
+    return layernorm_init(cfg.d_model, dtype) if cfg.norm == "layernorm" else rmsnorm_init(cfg.d_model, dtype)
+
+
+def _norm(cfg, p, x):
+    return layernorm(p, x, cfg.norm_eps) if cfg.norm == "layernorm" else rmsnorm(p, x, cfg.norm_eps)
+
+
+# ------------------------------------------------------------------- FFN
+def ffn_init(key, cfg, dtype, d_ff=None) -> Params:
+    ff = d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": linear_init(ks[0], cfg.d_model, ff, dtype),
+        "w_down": linear_init(ks[1], ff, cfg.d_model, dtype),
+    }
+    if is_gated(cfg.activation):
+        p["w_gate"] = linear_init(ks[2], cfg.d_model, ff, dtype)
+    return p
+
+
+def ffn(p: Params, cfg, x: jax.Array, *, backend: str = "dense") -> jax.Array:
+    up = linear(p["w_up"], x, backend=backend)
+    if is_gated(cfg.activation):
+        gate = linear(p["w_gate"], x, backend=backend)
+        h = activation(cfg.activation, gate, up)
+    else:
+        h = activation(cfg.activation, up)
+    return linear(p["w_down"], h, backend=backend)
+
+
+# ------------------------------------------------------------ uniform block
+def block_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+    p = {"ln1": _norm_init(cfg, dtype), "ln2": _norm_init(cfg, dtype)}
+    if cfg.family == "ssm":
+        p["ssm"] = ssm_mod.ssm_init(ks[0], cfg, dtype)
+        del p["ln2"]
+        return p
+    p["attn"] = attn_init(ks[0], cfg, dtype)
+    if cfg.is_moe:
+        p["moe"] = moe_init(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = ffn_init(ks[1], cfg, dtype)
+    return p
+
+
+def block_forward(p, cfg, x, positions, *, causal=True):
+    be = cfg.linear_backend
+    if cfg.seq_sharded_acts:
+        x = seq_shard(x)
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "ssm":
+        return x + ssm_mod.ssm_forward(p["ssm"], cfg, _norm(cfg, p["ln1"], x),
+                                       chunk=cfg.ssd_chunk, backend=be), aux
+    x = x + attention(p["attn"], cfg, _norm(cfg, p["ln1"], x), positions,
+                      causal=causal, backend=be)
+    if cfg.is_moe:
+        y, aux = moe_ffn(p["moe"], cfg, _norm(cfg, p["ln2"], x),
+                         group_size=cfg.moe_group_size,
+                         capacity_factor=cfg.capacity_factor, backend=be)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], cfg, _norm(cfg, p["ln2"], x), backend=be)
+    return x, aux
+
+
+# ------------------------------------------------------------ hybrid (Jamba)
+def group_init(key, cfg, dtype) -> Params:
+    """One Jamba group = attn_period layers: 1 attention + (P-1) mamba,
+    FFN after every layer; MoE FFN on odd in-group indices."""
+    per = cfg.attn_period
+    n_moe = per // 2
+    n_dense = per - n_moe
+    ks = jax.random.split(key, 6)
+    sub = lambda k, n, fn: jax.vmap(lambda kk: fn(kk))(jax.random.split(k, n))
+    return {
+        "ln_mix": sub(ks[0], per, lambda k: _norm_init(cfg, dtype)),
+        "ln_ffn": sub(ks[1], per, lambda k: _norm_init(cfg, dtype)),
+        "attn": attn_init(ks[2], cfg, dtype),
+        "ssm": sub(ks[3], per - 1, lambda k: ssm_mod.ssm_init(k, cfg, dtype)),
+        "ffn": sub(ks[4], n_dense, lambda k: ffn_init(k, cfg, dtype)),
+        "moe": sub(ks[5], n_moe, lambda k: moe_init(k, cfg, dtype)),
+    }
+
+
+def group_forward(p, cfg, x, positions):
+    be = cfg.linear_backend
+    if cfg.seq_sharded_acts:
+        x = seq_shard(x)
+    per = cfg.attn_period
+    attn_at = per // 2
+    aux = jnp.zeros((), jnp.float32)
+    tree_i = lambda t, i: jax.tree.map(lambda a: a[i], t)
+    si = di = mi = 0
+    for j in range(per):
+        h = _norm(cfg, tree_i(p["ln_mix"], j), x)
+        if j == attn_at:
+            x = x + attention(p["attn"], cfg, h, positions, backend=be)
+        else:
+            x = x + ssm_mod.ssm_forward(tree_i(p["ssm"], si), cfg, h,
+                                        chunk=cfg.ssd_chunk, backend=be)
+            si += 1
+        h = _norm(cfg, tree_i(p["ln_ffn"], j), x)
+        if j % 2 == 1:
+            y, a = moe_ffn(tree_i(p["moe"], mi), cfg, h,
+                           group_size=cfg.moe_group_size,
+                           capacity_factor=cfg.capacity_factor, backend=be)
+            x = x + y
+            aux = aux + a
+            mi += 1
+        else:
+            x = x + ffn(tree_i(p["ffn"], di), cfg, h, backend=be)
+            di += 1
+    return x, aux
+
+
+# --------------------------------------------------------------- stacks
+def stack_init(key, cfg, dtype) -> Params:
+    """Stacked per-layer params: leading axis = scan axis."""
+    if cfg.is_hybrid:
+        n = cfg.num_layers // cfg.attn_period
+        return jax.vmap(lambda k: group_init(k, cfg, dtype))(jax.random.split(key, n))
+    return jax.vmap(lambda k: block_init(k, cfg, dtype))(jax.random.split(key, cfg.num_layers))
+
+
+def stack_forward(params, cfg, x, positions, *, causal=True):
+    fwd = group_forward if cfg.is_hybrid else functools.partial(block_forward, causal=causal)
+
+    def body(carry, layer_params):
+        h, aux = carry
+        h, a = fwd(layer_params, cfg, h, positions)
+        return (h, aux + a), None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), jnp.float32)), params,
+                               unroll=cfg.scan_unroll)
+    return x, aux
+
+
+# --------------------------------------------------------------- decode path
+def init_block_cache(cfg, batch: int, max_len: int, dtype):
+    if cfg.family == "ssm":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    return init_kv_cache(cfg, batch, max_len, dtype)
+
+
+def init_stack_caches(cfg, batch: int, max_len: int, dtype=jnp.bfloat16):
+    if cfg.is_hybrid:
+        n = cfg.num_layers // cfg.attn_period
+        per = cfg.attn_period
+
+        def one(_):
+            return {
+                "attn": init_kv_cache(cfg, batch, max_len, dtype),
+                "ssm": jax.vmap(lambda _: ssm_mod.init_ssm_cache(cfg, batch, jnp.float32))(
+                    jnp.arange(per - 1)
+                ),
+            }
+
+        return jax.vmap(one)(jnp.arange(n))
+    return jax.vmap(lambda _: init_block_cache(cfg, batch, max_len, dtype))(
+        jnp.arange(cfg.num_layers)
+    )
+
+
+def _block_decode(p, cfg, x, pos, cache):
+    be = cfg.linear_backend
+    if cfg.family == "ssm":
+        y, cache = ssm_mod.ssm_decode_step(p["ssm"], cfg, _norm(cfg, p["ln1"], x),
+                                           cache, backend=be)
+        return x + y, cache
+    y, cache = attention_decode(p["attn"], cfg, _norm(cfg, p["ln1"], x), pos,
+                                cache, backend=be)
+    x = x + y
+    if cfg.is_moe:
+        y, _ = moe_ffn(p["moe"], cfg, _norm(cfg, p["ln2"], x),
+                       group_size=cfg.moe_group_size,
+                       capacity_factor=2.0, backend=be)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], cfg, _norm(cfg, p["ln2"], x), backend=be)
+    return x, cache
+
+
+def _group_decode(p, cfg, x, pos, cache):
+    be = cfg.linear_backend
+    per = cfg.attn_period
+    attn_at = per // 2
+    tree_i = lambda t, i: jax.tree.map(lambda a: a[i], t)
+    si = di = mi = 0
+    new_ssm = []
+    attn_cache = cache["attn"]
+    for j in range(per):
+        h = _norm(cfg, tree_i(p["ln_mix"], j), x)
+        if j == attn_at:
+            y, attn_cache = attention_decode(p["attn"], cfg, h, pos, attn_cache, backend=be)
+            x = x + y
+        else:
+            y, c = ssm_mod.ssm_decode_step(tree_i(p["ssm"], si), cfg, h,
+                                           tree_i(cache["ssm"], si), backend=be)
+            x = x + y
+            new_ssm.append(c)
+            si += 1
+        h = _norm(cfg, tree_i(p["ln_ffn"], j), x)
+        if j % 2 == 1:
+            y, _ = moe_ffn(tree_i(p["moe"], mi), cfg, h,
+                           group_size=cfg.moe_group_size, capacity_factor=2.0,
+                           backend=be)
+            x = x + y
+            mi += 1
+        else:
+            x = x + ffn(tree_i(p["ffn"], di), cfg, h, backend=be)
+            di += 1
+    ssm_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm)
+    return x, {"attn": attn_cache, "ssm": ssm_stacked}
+
+
+def stack_decode(params, cfg, x, pos, caches):
+    dec = _group_decode if cfg.is_hybrid else _block_decode
+
+    def body(carry, scanned):
+        h = carry
+        layer_params, cache = scanned
+        h, new_cache = dec(layer_params, cfg, h, pos, cache)
+        return h, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches
+
+
+def _block_prefill(p, cfg, x, positions, cache):
+    """Full-seq pass that fills caches (serving prefill)."""
+    be = cfg.linear_backend
+    if cfg.family == "ssm":
+        h = _norm(cfg, p["ln1"], x)
+        y, new_cache = ssm_mod.ssm_prefill(p["ssm"], cfg, h, chunk=cfg.ssd_chunk,
+                                           backend=be)
+        return x + y, new_cache
+    y, cache = attention_prefill(p["attn"], cfg, _norm(cfg, p["ln1"], x),
+                                 positions, cache, backend=be)
+    x = x + y
+    if cfg.is_moe:
+        y, _ = moe_ffn(p["moe"], cfg, _norm(cfg, p["ln2"], x),
+                       group_size=cfg.moe_group_size,
+                       capacity_factor=cfg.capacity_factor, backend=be)
+        x = x + y
+    else:
+        x = x + ffn(p["ffn"], cfg, _norm(cfg, p["ln2"], x), backend=be)
+    return x, cache
+
+
+def _group_prefill(p, cfg, x, positions, cache):
+    be = cfg.linear_backend
+    per = cfg.attn_period
+    attn_at = per // 2
+    tree_i = lambda t, i: jax.tree.map(lambda a: a[i], t)
+    si = di = mi = 0
+    new_ssm = []
+    attn_cache = cache["attn"]
+    for j in range(per):
+        h = _norm(cfg, tree_i(p["ln_mix"], j), x)
+        if j == attn_at:
+            y, attn_cache = attention_prefill(p["attn"], cfg, h, positions,
+                                              attn_cache, backend=be)
+            x = x + y
+        else:
+            sp = tree_i(p["ssm"], si)
+            y, c = ssm_mod.ssm_prefill(sp, cfg, h, chunk=cfg.ssd_chunk, backend=be)
+            x = x + y
+            new_ssm.append(c)
+            si += 1
+        h = _norm(cfg, tree_i(p["ln_ffn"], j), x)
+        if j % 2 == 1:
+            y, _ = moe_ffn(tree_i(p["moe"], mi), cfg, h,
+                           group_size=cfg.moe_group_size,
+                           capacity_factor=cfg.capacity_factor, backend=be)
+            x = x + y
+            mi += 1
+        else:
+            x = x + ffn(tree_i(p["ffn"], di), cfg, h, backend=be)
+            di += 1
+    ssm_stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *new_ssm)
+    return x, {"attn": attn_cache, "ssm": ssm_stacked}
+
+
+def stack_prefill(params, cfg, x, positions, caches):
+    pre = _group_prefill if cfg.is_hybrid else _block_prefill
+
+    def body(carry, scanned):
+        h = carry
+        layer_params, cache = scanned
+        h, new_cache = pre(layer_params, cfg, h, positions, cache)
+        return h, new_cache
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, new_caches = jax.lax.scan(body, x, (params, caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches
+
+
+# --------------------------------------------------------- encoder-decoder
+def encdec_init(key, cfg, dtype) -> Params:
+    ks = jax.random.split(key, 4)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": _norm_init(cfg, dtype), "attn": attn_init(k1, cfg, dtype),
+                "ln2": _norm_init(cfg, dtype), "ffn": ffn_init(k2, cfg, dtype)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": _norm_init(cfg, dtype), "attn": attn_init(k1, cfg, dtype),
+            "lnx": _norm_init(cfg, dtype), "xattn": attn_init(k2, cfg, dtype),
+            "ln2": _norm_init(cfg, dtype), "ffn": ffn_init(k3, cfg, dtype),
+        }
+
+    return {
+        "enc": jax.vmap(enc_layer)(jax.random.split(ks[0], cfg.enc_layers)),
+        "dec": jax.vmap(dec_layer)(jax.random.split(ks[1], cfg.num_layers)),
+        "ln_enc": _norm_init(cfg, dtype),
+    }
+
+
+def encoder_forward(params, cfg, x, positions):
+    be = cfg.linear_backend
+
+    def body(h, p):
+        h = h + attention(p["attn"], cfg, _norm(cfg, p["ln1"], h), positions,
+                          causal=False, backend=be)
+        h = h + ffn(p["ffn"], cfg, _norm(cfg, p["ln2"], h), backend=be)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["enc"], unroll=cfg.scan_unroll)
+    return _norm(cfg, params["ln_enc"], x)
+
+
+def decoder_forward(params, cfg, x, positions, enc_out):
+    be = cfg.linear_backend
+
+    def body(h, p):
+        h = h + attention(p["attn"], cfg, _norm(cfg, p["ln1"], h), positions,
+                          causal=True, backend=be)
+        h = h + cross_attention(p["xattn"], cfg, _norm(cfg, p["lnx"], h),
+                                enc_out, backend=be)
+        h = h + ffn(p["ffn"], cfg, _norm(cfg, p["ln2"], h), backend=be)
+        return h, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["dec"], unroll=cfg.scan_unroll)
+    return x
+
+
+def decoder_decode(params, cfg, x, pos, caches, enc_out):
+    be = cfg.linear_backend
+
+    def body(h, scanned):
+        p, cache = scanned
+        y, cache = attention_decode(p["attn"], cfg, _norm(cfg, p["ln1"], h),
+                                    pos, cache, backend=be)
+        h = h + y
+        h = h + cross_attention(p["xattn"], cfg, _norm(cfg, p["lnx"], h),
+                                enc_out, backend=be)
+        h = h + ffn(p["ffn"], cfg, _norm(cfg, p["ln2"], h), backend=be)
+        return h, cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["dec"], caches),
+                                 unroll=cfg.scan_unroll)
+    return x, new_caches

@@ -1,0 +1,36 @@
+"""Qwen2-VL backbone support: M-RoPE position builder + patch-embed stub.
+
+Per the assignment, the modality frontend is a STUB: ``input_specs()``
+provides precomputed patch embeddings (B, P, d_model).  The backbone is the
+full GQA transformer with multimodal rotary positions: vision tokens carry
+(temporal, height, width) ids over the patch grid, text tokens carry equal
+t/h/w ids continuing after the vision prefix (degenerates to 1-D RoPE).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def mrope_positions(batch: int, prefix: int, seq: int, grid_w: int = 16):
+    """(3, B, prefix+seq) int32 position ids for [vision prefix | text]."""
+    if prefix:
+        vp = jnp.arange(prefix)
+        t_v = jnp.zeros((prefix,), jnp.int32)
+        h_v = (vp // grid_w).astype(jnp.int32)
+        w_v = (vp % grid_w).astype(jnp.int32)
+        base = jnp.maximum(jnp.maximum(t_v.max(), h_v.max()), w_v.max()) + 1
+    else:
+        t_v = h_v = w_v = jnp.zeros((0,), jnp.int32)
+        base = 0
+    txt = base + jnp.arange(seq, dtype=jnp.int32)
+    t = jnp.concatenate([t_v, txt])
+    h = jnp.concatenate([h_v, txt])
+    w = jnp.concatenate([w_v, txt])
+    pos = jnp.stack([t, h, w])  # (3, P+S)
+    return jnp.broadcast_to(pos[:, None, :], (3, batch, prefix + seq))
+
+
+def patch_embed_stub(batch: int, n_patches: int, d_model: int, dtype=jnp.bfloat16):
+    """Stand-in for the ViT frontend: precomputed patch embeddings."""
+    return jnp.zeros((batch, n_patches, d_model), dtype)

@@ -1,0 +1,57 @@
+"""Int8 gradient compression with error feedback for the DP all-reduce.
+
+At 1000+-node scale the DP gradient all-reduce is ICI/DCN-bound; 4x
+compression (f32/bf16 -> int8 with a shared per-tensor scale) cuts the
+collective term proportionally.  Error feedback (residual accumulation)
+preserves convergence:
+
+    e   <- e + g                      (accumulate residual)
+    s   <- pmax(|e|) / 127            (shared scale across replicas)
+    q   <- round(e / s)  in int8
+    e   <- e - q * s                  (new residual)
+    g'  <- psum(q) * s / N            (int32-summed, dequantized mean)
+
+This composes with the paper's theme: the same symmetric-int grid the MVU
+uses for weights, applied to the gradient stream.  Use inside shard_map
+over the DP axes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def psum_compressed(grads, errors, axis_names):
+    """Compressed mean-all-reduce; returns (mean_grads f32, new_errors)."""
+    n = 1
+    for a in axis_names:
+        n = n * jax.lax.psum(1, a)
+
+    def one(g, e):
+        x = g.astype(jnp.float32) + e
+        amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis_names)
+        scale = jnp.maximum(amax, 1e-12) / 127.0
+        q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+        new_e = x - q.astype(jnp.float32) * scale
+        summed = jax.lax.psum(q.astype(jnp.int32), axis_names)
+        return summed.astype(jnp.float32) * scale / n, new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return tdef.unflatten([o[0] for o in out]), tdef.unflatten([o[1] for o in out])
+
+
+def psum_plain(grads, axis_names):
+    """Uncompressed mean-all-reduce (baseline for the comparison)."""
+    n = 1
+    for a in axis_names:
+        n = n * jax.lax.psum(1, a)
+    return jax.tree.map(
+        lambda g: jax.lax.psum(g.astype(jnp.float32), axis_names) / n, grads
+    )

@@ -1,0 +1,65 @@
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import folding as f
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 2048), st.integers(1, 64))
+def test_cycle_model_conservation(n, k, pixels):
+    """cycles * PE * SIMD == MACs when folds divide exactly (II=1 invariant)."""
+    fold = f.choose_folding(n, k)
+    fold.validate(n, k)
+    cycles = fold.cycles(n, k, pixels)
+    assert cycles * fold.pe * fold.simd == n * k * pixels
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(1, 512), st.integers(1, 2048))
+def test_choose_folding_meets_target(n, k):
+    full = f.Folding(min(128, max(d for d in f.divisors(n) if d <= 128)),
+                     min(128, max(d for d in f.divisors(k) if d <= 128)))
+    target = full.cycles(n, k) * 4
+    fold = f.choose_folding(n, k, target_cycles=target)
+    fold.validate(n, k)
+    assert fold.cycles(n, k) <= max(target, full.cycles(n, k))
+
+
+def test_weight_mem_depth_eq2():
+    # paper Eq. 2 with Kd=4, Ic=64, Oc=64, SIMD=32, PE=32
+    k = 4 * 4 * 64
+    n = 64
+    fold = f.Folding(32, 32)
+    assert f.weight_mem_depth(n, k, fold) == (k * n) // (32 * 32)
+    assert f.input_buffer_depth(k, fold) == k // 32
+
+
+def test_balance_pipeline_rate_matches():
+    # NID MLP shapes (Table 6): (OFM, K, pixels)
+    layers = [(64, 600, 1), (64, 64, 1), (64, 64, 1), (1, 64, 1)]
+    folds = f.balance_pipeline(layers, max_pe=64, max_simd=64)
+    cycles = [fd.cycles(n, k, px) for fd, (n, k, px) in zip(folds, layers)]
+    slowest = max(cycles)
+    # every stage is within the bottleneck's interval (balanced pipeline)
+    assert all(c <= slowest for c in cycles)
+    # and the bottleneck cannot be improved with legal folds under the caps
+    full = [
+        f.Folding(max(d for d in f.divisors(n) if d <= 64),
+                  max(d for d in f.divisors(k) if d <= 64)).cycles(n, k, px)
+        for n, k, px in layers
+    ]
+    assert slowest == max(full)
+
+
+def test_illegal_folding_raises():
+    with pytest.raises(ValueError):
+        f.Folding(3, 2).validate(64, 64)
+    with pytest.raises(ValueError):
+        f.Folding(2, 7).validate(64, 64)
+
+
+def test_to_tpu_blocks_xnor_words():
+    blocks = f.to_tpu_blocks(f.Folding(64, 64), "xnor")
+    assert blocks["block_kw"] == 2  # 64 synapses = 2 packed words
+    blocks = f.to_tpu_blocks(f.Folding(64, 64), "standard")
+    assert blocks["block_k"] == 64 and blocks["block_n"] == 64

@@ -1,0 +1,121 @@
+"""Per-architecture smoke tests (reduced configs) + decode consistency."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, get_config, get_reduced
+from repro.models.model import build
+
+
+def _batch(cfg, key, b=2, s=16):
+    batch = {"tokens": jax.random.randint(key, (b, s + 1), 0, cfg.vocab_size)}
+    if cfg.family == "vlm":
+        batch["prefix_embeds"] = (
+            jax.random.normal(key, (b, 8, cfg.d_model)) * 0.1
+        ).astype(jnp.bfloat16)
+    if cfg.encdec:
+        batch["enc_embeds"] = jax.random.normal(key, (b, 12, cfg.d_model)) * 0.1
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_smoke_train_step(arch):
+    cfg = get_reduced(arch)
+    m = build(cfg)
+    key = jax.random.PRNGKey(0)
+    params = m.init(key)
+    batch = _batch(cfg, key)
+    (loss, metrics), grads = jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+    assert jnp.isfinite(loss), f"{arch}: loss not finite"
+    assert loss.shape == ()
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g.astype(jnp.float32)))) for g in leaves), (
+        f"{arch}: non-finite grads"
+    )
+    # reasonable initial loss ~ ln(vocab)
+    assert 0.5 * np.log(cfg.vocab_size) < float(loss) < 2.5 * np.log(cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_arch_full_config_instantiates(arch):
+    cfg = get_config(arch)
+    # full configs are exercised via abstract shapes only (no allocation)
+    m = build(cfg)
+    shapes = jax.eval_shape(m.init, jax.random.PRNGKey(0))
+    n_params = sum(int(np.prod(s.shape)) for s in jax.tree.leaves(shapes))
+    assert n_params > 0
+    # config param-count model within 25% of actual instantiated count
+    approx = cfg.param_count
+    assert abs(approx - n_params) / n_params < 0.25, (arch, approx, n_params)
+
+
+@pytest.mark.parametrize(
+    "arch",
+    ["yi-9b", "h2o-danube-1.8b", "granite-moe-3b-a800m", "mamba2-780m",
+     "jamba-1.5-large-398b", "whisper-tiny"],
+)
+def test_prefill_decode_matches_forward(arch):
+    """prefill(prompt) + decode steps == teacher-forced full forward logits."""
+    # capacity_factor high enough that no token is ever dropped: capacity
+    # MoE only matches step-decode exactly when routing drops nothing.
+    cfg = get_reduced(arch).replace(remat=False, dtype="float32",
+                                    capacity_factor=8.0)
+    m = build(cfg)
+    key = jax.random.PRNGKey(1)
+    params = m.init(key)
+    b, s_total, s_prompt = 2, 12, 8
+    batch = _batch(cfg, key, b, s_total)
+    tokens = batch["tokens"][:, : s_total + 1]
+
+    # teacher-forced logits over the whole sequence via the loss path graph:
+    # reuse internal pieces -- run prefill over the full sequence instead.
+    state_full = m.init_decode_state(b, 32)
+    pf_batch = {**batch, "tokens": tokens[:, :s_total]}
+    logits_full, _ = m.prefill(params, pf_batch, state_full)
+
+    # prompt prefill + step-by-step decode to the same position
+    state = m.init_decode_state(b, 32)
+    pr_batch = {**batch, "tokens": tokens[:, :s_prompt]}
+    logits, state = m.prefill(params, pr_batch, state)
+    for t in range(s_prompt, s_total):
+        logits, state = m.decode_step(params, state, tokens[:, t])
+    np.testing.assert_allclose(
+        np.asarray(logits), np.asarray(logits_full), rtol=2e-2, atol=2e-2
+    )
+    # argmax agreement (the serving-relevant invariant)
+    assert (np.argmax(np.asarray(logits), -1) == np.argmax(np.asarray(logits_full), -1)).all()
+
+
+def test_tiny_lm_loss_decreases():
+    cfg = get_reduced("yi-9b").replace(dtype="float32", remat=False)
+    m = build(cfg)
+    key = jax.random.PRNGKey(2)
+    params = m.init(key)
+    batch = _batch(cfg, key, b=4, s=24)
+
+    @jax.jit
+    def step(params, batch):
+        (l, _), g = jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+        params = jax.tree.map(lambda p, gg: p - 0.05 * gg.astype(p.dtype), params, g)
+        return params, l
+
+    losses = []
+    for _ in range(12):
+        params, l = step(params, batch)
+        losses.append(float(l))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_mvu_backend_model_runs():
+    """The paper's engine as the Linear backend of an assigned arch."""
+    cfg = get_reduced("yi-9b").replace(linear_backend="mvu_w4a8", dtype="float32")
+    m = build(cfg)
+    key = jax.random.PRNGKey(3)
+    params = m.init(key)
+    batch = _batch(cfg, key)
+    (loss, _), grads = jax.value_and_grad(m.loss, has_aux=True)(params, batch)
+    assert jnp.isfinite(loss)
+    gn = sum(float(jnp.sum(jnp.abs(g.astype(jnp.float32)))) for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0

@@ -1,0 +1,46 @@
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import packing
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(1, 4),  # rows
+    st.integers(1, 130),  # K bits (crosses word boundaries)
+    st.integers(0, 2**31 - 1),
+)
+def test_pack_unpack_roundtrip(rows, k, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (rows, k)).astype(np.int32)
+    packed = packing.pack_bits(jnp.asarray(bits))
+    assert packed.shape == (rows, packing.num_words(k))
+    assert packed.dtype == jnp.uint32
+    back = np.asarray(packing.unpack_bits(packed, k))
+    np.testing.assert_array_equal(back, bits)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(1, 200), st.integers(0, 2**31 - 1))
+def test_xnor_popcount_identity(k, seed):
+    """2*popcount(~(a^w)) - K equals the bipolar dot product (padded-K form)."""
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, (k,)).astype(np.int32)
+    w = rng.integers(0, 2, (k,)).astype(np.int32)
+    ap = packing.pack_bits(jnp.asarray(a))
+    wp = packing.pack_bits(jnp.asarray(w))
+    pc = int(np.sum(np.asarray(packing.popcount(~(ap ^ wp)))))
+    kp = packing.padded_bits(k)
+    dot = 2 * pc - kp - (kp - k)
+    want = int(((2 * a - 1) * (2 * w - 1)).sum())
+    assert dot == want
+
+
+def test_bipolar_maps():
+    x = jnp.asarray([-3, -1, 0, 1, 5])
+    b = packing.bipolar_to_bits(x)
+    np.testing.assert_array_equal(np.asarray(b), [0, 0, 0, 1, 1])
+    np.testing.assert_array_equal(
+        np.asarray(packing.bits_to_bipolar(jnp.asarray([0, 1]))), [-1, 1]
+    )

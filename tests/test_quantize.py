@@ -1,0 +1,63 @@
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as q
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.sampled_from([2, 3, 4, 8]))
+def test_weight_quant_grid_and_range(seed, bits):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, (6, 40)).astype(np.float32)
+    qt = q.quantize_weights(jnp.asarray(w), bits)
+    lo, hi = q.int_bounds(bits, signed=True)
+    vals = np.asarray(qt.values)
+    assert vals.min() >= lo and vals.max() <= hi
+    # dequantized error bounded by half a step per element
+    deq = vals * np.asarray(qt.scale)
+    step = np.asarray(qt.scale)
+    assert (np.abs(deq - w) <= step / 2 + 1e-6).all()
+
+
+def test_weight_quant_binary_sign():
+    w = jnp.asarray([[0.5, -0.2, 0.0, -3.0]])
+    qt = q.quantize_weights(w, 1)
+    np.testing.assert_array_equal(np.asarray(qt.values), [[1, -1, 1, -1]])
+
+
+def test_fake_quant_ste_gradient_passthrough():
+    w = jnp.linspace(-2, 2, 64).reshape(4, 16)
+    g = jax.grad(lambda x: jnp.sum(q.fake_quant_weights(x, 4)))(w)
+    # STE: gradient of sum is ~1 everywhere (scale held via stop_gradient)
+    np.testing.assert_allclose(np.asarray(g), np.ones_like(np.asarray(g)), atol=1e-5)
+
+
+def test_fake_quant_activations_levels():
+    x = jnp.linspace(-1, 2, 101)
+    y = np.asarray(q.fake_quant_activations(x, 2, max_val=1.0))
+    levels = np.unique(np.round(y * 3).astype(int))
+    assert set(levels).issubset({0, 1, 2, 3})
+    assert y.min() >= 0 and y.max() <= 1.0
+
+
+def test_binarize_bipolar_values_and_grad():
+    x = jnp.asarray([-2.0, -0.5, 0.0, 0.7, 3.0])
+    y = np.asarray(q.binarize_bipolar(x))
+    np.testing.assert_array_equal(y, [-1, -1, 1, 1, 1])
+    g = jax.grad(lambda v: jnp.sum(q.binarize_bipolar(v)))(x)
+    # clipped-identity STE: grad 1 inside [-1,1], 0 outside
+    np.testing.assert_array_equal(np.asarray(g), [0, 1, 1, 1, 0])
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_quantize_dequantize_idempotent(seed):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(0, 1, (4, 32)).astype(np.float32)
+    qt = q.quantize_weights(jnp.asarray(w), 4)
+    deq = np.asarray(qt.values) * np.asarray(qt.scale)
+    qt2 = q.quantize_weights(jnp.asarray(deq), 4)
+    deq2 = np.asarray(qt2.values) * np.asarray(qt2.scale)
+    np.testing.assert_allclose(deq, deq2, atol=1e-5)

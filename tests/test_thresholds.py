@@ -1,0 +1,61 @@
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import thresholds as th
+
+
+def test_apply_thresholds_basic():
+    acc = jnp.asarray([[-5, 0, 5]]).T  # (3,1)
+    t = jnp.asarray([[-2, 1, 4]])  # one channel, 3 thresholds
+    out = np.asarray(th.apply_thresholds(acc, jnp.tile(t, (1, 1))))
+    # channel 0 thresholds [-2,1,4]: acc -5 ->0; 0 ->1; 5 ->3
+    np.testing.assert_array_equal(out[:, 0], [0, 1, 3])
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 4))
+def test_thresholds_equal_bn_then_quant(seed, bits):
+    """The folded integer thresholds reproduce quant(BN(acc)) exactly."""
+    rng = np.random.default_rng(seed)
+    c = 8
+    gamma = rng.uniform(-2, 2, c).astype(np.float32)
+    gamma[np.abs(gamma) < 1e-2] = 0.5  # keep away from zero
+    beta = rng.uniform(-1, 1, c).astype(np.float32)
+    mean = rng.uniform(-5, 5, c).astype(np.float32)
+    var = rng.uniform(0.1, 4, c).astype(np.float32)
+    act_scale = 1.0
+    n_levels = 2**bits
+
+    t, flip = th.bn_quant_thresholds(
+        jnp.asarray(gamma), jnp.asarray(beta), jnp.asarray(mean), jnp.asarray(var),
+        bits=bits, act_scale=act_scale,
+    )
+    t_int = th.integerize_thresholds(t)
+
+    acc = rng.integers(-50, 50, (64, c)).astype(np.int32)
+    # reference: BN then round-to-nearest unsigned quantizer
+    std = np.sqrt(var + 1e-5)
+    y = (acc - mean) * gamma / std + beta
+    want = np.clip(np.round(y / act_scale), 0, n_levels - 1).astype(np.int32)
+
+    acc_eff = np.where(np.asarray(flip)[None, :], -acc, acc)
+    got = np.asarray(th.apply_thresholds(jnp.asarray(acc_eff), t_int))
+    np.testing.assert_array_equal(got, want)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2**31 - 1))
+def test_threshold_activation_monotone(seed):
+    rng = np.random.default_rng(seed)
+    t = np.sort(rng.integers(-100, 100, (4, 7)), axis=1)
+    acc = np.sort(rng.integers(-200, 200, (32, 4)), axis=0)
+    out = np.asarray(th.apply_thresholds(jnp.asarray(acc), jnp.asarray(t)))
+    assert (np.diff(out, axis=0) >= 0).all()  # nondecreasing in acc
+
+
+def test_streamline_signs():
+    w = jnp.asarray([[1, -2], [3, 4]], jnp.float32)
+    flip = jnp.asarray([True, False])
+    out = np.asarray(th.streamline_signs(w, flip))
+    np.testing.assert_array_equal(out, [[-1, 2], [3, 4]])
