@@ -1,0 +1,124 @@
+"""Fused engine vs unfused interpreter throughput on the NID-MLP config.
+
+Builds the paper's Table 6 MLP (600-64-64-64-1, 2-bit activations) with the
+paper's PE/SIMD folding, *finalized but not streamlined* — so the graph
+keeps its standalone batchnorm/quant_act nodes.  That graph runs two ways:
+
+  unfused   ``dataflow.execute``: eager Python loop, one dispatch per node,
+            float BN/quant epilogues between the MVU kernels
+  fused     ``FusedEngine``: epilogues folded into the MVU threshold
+            epilogue, whole chain jit-compiled once, microbatch streaming
+            per the dataflow schedule (paper section 5.3 analog)
+
+Emits one JSON record (default experiments/bench/engine_throughput.json)
+with both timings, the speedup, and the stream plan.  ``--quick`` shrinks
+the batch/reps for CI smoke runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.configs import nid_mlp
+from repro.core import dataflow, lowering
+from repro.core.engine import FusedEngine
+from repro.core.ir import Graph, Node
+from repro.core.mvu import MVUConfig
+
+
+def build_nid_graph(seed: int = 0) -> Graph:
+    """Table 6 MLP with random trained-like weights, lowered + finalized
+    (NOT streamlined — bn/quant stay as standalone nodes) and folded with
+    the paper's PE/SIMD choices."""
+    rng = np.random.default_rng(seed)
+    dims = [k for (k, _, _, _) in nid_mlp.LAYERS] + [nid_mlp.LAYERS[-1][1]]
+    g: Graph = [Node("input", "in", {"shape": (dims[0],), "bits": nid_mlp.INPUT_BITS})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = (rng.normal(0, 1, (n, k)) / np.sqrt(k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("batchnorm", f"bn{i}", {}, {
+                "gamma": jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32)),
+                "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
+                "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+                "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
+            }))
+            g.append(Node("quant_act", f"act{i}",
+                          {"bits": nid_mlp.INPUT_BITS, "act_scale": 1.0}))
+    lowered = lowering.lower_to_mvu(
+        g, mode="standard", weight_bits=8, act_bits=nid_mlp.INPUT_BITS)
+    fin = lowering.finalize(lowered)
+    for node, fold in zip([n for n in fin if n.op == "mvu"], nid_mlp.foldings()):
+        node.attrs["config"] = MVUConfig(
+            **{**node.attrs["config"].__dict__, "folding": fold})
+    return fin
+
+
+def run(*, batch: int = 4096, reps: int = 5, seed: int = 0,
+        out: str | None = "experiments/bench/engine_throughput.json") -> dict:
+    graph = build_nid_graph(seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(
+        rng.integers(0, 2**nid_mlp.INPUT_BITS, (batch, 600)), jnp.int32)
+
+    engine = FusedEngine(graph)
+    plan = engine.plan(batch)
+
+    want = np.asarray(dataflow.execute(graph, x))
+    got = np.asarray(engine(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    t_unfused = time_call(lambda v: dataflow.execute(graph, v), x, reps=reps)
+    t_fused = time_call(engine, x, reps=reps)
+
+    record = {
+        "config": "nid_mlp_600_64_64_64_1_2bit",
+        "batch": batch,
+        "reps": reps,
+        "unfused_us": t_unfused * 1e6,
+        "fused_us": t_fused * 1e6,
+        "speedup": t_unfused / t_fused,
+        "unfused_samples_per_s": batch / t_unfused,
+        "fused_samples_per_s": batch / t_fused,
+        "n_micro": plan.n_micro,
+        "microbatch": plan.microbatch,
+        "interval_cycles": plan.interval_cycles,
+        "fifo_bound": plan.fifo_bound,
+        "bottleneck": engine.schedule.bottleneck.name,
+        "fused_nodes": sum(1 for n in engine.graph if n.attrs.get("fused")),
+        "bit_exact": bool(np.array_equal(got, want)),
+    }
+    if out:
+        out_dir = os.path.dirname(out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=4096)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--quick", action="store_true",
+                    help="small batch / few reps (CI smoke)")
+    ap.add_argument("--out", default="experiments/bench/engine_throughput.json")
+    args = ap.parse_args()
+    if args.quick:
+        args.batch, args.reps = min(args.batch, 512), 2
+
+    rec = run(batch=args.batch, reps=args.reps, out=args.out)
+    print(json.dumps(rec, indent=2))
+    print(f"# fused {rec['fused_us']:.0f}us vs unfused {rec['unfused_us']:.0f}us "
+          f"-> {rec['speedup']:.2f}x ({rec['fused_samples_per_s']:.0f} samples/s)")
+
+
+if __name__ == "__main__":
+    main()

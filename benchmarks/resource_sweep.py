@@ -12,7 +12,7 @@ Columns:
 
 from __future__ import annotations
 
-from benchmarks.common import compile_probe, emit, hls_ref_fn, make_operands
+from benchmarks.common import compile_probe, emit, hls_ref_fn
 from repro.configs.paper_sweeps import (
     CONFIGURATIONS, LARGE_CONFIGS, SIMD_TYPES, expand, mvu_shape,
 )

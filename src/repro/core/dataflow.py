@@ -95,33 +95,55 @@ def schedule(graph: Graph) -> DataflowSchedule:
     return DataflowSchedule(stages)
 
 
+def node_runner(node):
+    """Per-node semantics as ``(params, fn)`` with ``fn(params, x) -> x``.
+
+    The eager interpreter (:func:`execute`) and the fused engine
+    (``repro.core.engine``) both apply nodes through this single definition,
+    so the jit-compiled engine is bit-exact with the behavioural model by
+    construction.  ``params`` is the node's traced pytree (or ``None``).
+    """
+    if node.op == "input":
+        return None, lambda p, x: x
+    if node.op == "swu":
+        kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
+        return None, lambda p, x: swu_mod.sliding_window(x, kd, st, pd)  # (B, P, K)
+    if node.op == "mvu":
+        cfg: MVUConfig = node.attrs["config"]
+        layer = MVULayer(cfg)
+
+        def run_mvu(p, x):
+            if cfg.mode == "xnor" and x.dtype != jnp.uint32:
+                x = packing.pack_bits(x.astype(jnp.int32))
+            return layer(p, x)
+
+        return node.params["mvu"], run_mvu
+    if node.op == "batchnorm":
+        p = {k: node.params[k] for k in ("gamma", "beta", "mean", "var")}
+        return p, lambda p, x: (
+            (x - p["mean"]) * p["gamma"] / jnp.sqrt(p["var"] + 1e-5) + p["beta"]
+        )
+    if node.op == "quant_act":
+        bits = node.attrs["bits"]
+        s = node.attrs.get("act_scale", 1.0)
+        # round-half-up: level j iff x >= (j - 0.5) * s, the multi-threshold
+        # unit's decision rule, so threshold fusion (streamline /
+        # fuse_epilogues) is exact even at half-level ties.
+        return None, lambda p, x: jnp.clip(
+            jnp.floor(x / s + 0.5), 0, 2**bits - 1
+        ).astype(jnp.int32)
+    raise ValueError(f"unknown op {node.op!r} ({node.name})")
+
+
 def execute(graph: Graph, x: jax.Array) -> jax.Array:
     """Run the lowered integer graph on host (behavioural model).
 
     x: for conv nets (B, H, W, C); for MLPs (B, K).  Integer dtypes.
+    This is the eager per-node reference; ``repro.core.engine.FusedEngine``
+    compiles the same node chain into one jit'd streaming executable.
     """
     cur = x
     for node in graph:
-        if node.op == "input":
-            continue
-        if node.op == "swu":
-            cur = swu_mod.sliding_window(
-                cur, node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
-            )  # (B, P, K)
-        elif node.op == "mvu":
-            cfg: MVUConfig = node.attrs["config"]
-            layer = MVULayer(cfg)
-            params = node.params["mvu"]
-            xin = cur
-            if cfg.mode == "xnor" and xin.dtype != jnp.uint32:
-                xin = packing.pack_bits(xin.astype(jnp.int32))
-            cur = layer(params, xin)
-        elif node.op == "batchnorm":
-            g, b = node.params["gamma"], node.params["beta"]
-            m, v = node.params["mean"], node.params["var"]
-            cur = (cur - m) * g / jnp.sqrt(v + 1e-5) + b
-        elif node.op == "quant_act":
-            bits = node.attrs["bits"]
-            s = node.attrs.get("act_scale", 1.0)
-            cur = jnp.clip(jnp.round(cur / s), 0, 2**bits - 1).astype(jnp.int32)
+        params, fn = node_runner(node)
+        cur = fn(params, cur)
     return cur

@@ -127,6 +127,105 @@ def finalize(graph: Graph) -> Graph:
     return out
 
 
+def _flip_weight_rows(weights: jnp.ndarray, flip: jnp.ndarray, cfg: MVUConfig):
+    """Negate the (bipolar) value of flipped weight rows, per weight coding.
+
+    standard: integer rows negate directly (widened so -(-2^(b-1)) is safe);
+    binary:   {0,1}-coded +/-1 rows flip bits (1 - w);
+    xnor:     packed rows unpack over the true K bits, flip, repack (pad
+              bits stay zero, preserving the popcount correction).
+    """
+    from repro.kernels import packing
+
+    if cfg.mode == "xnor":
+        bits = packing.unpack_bits(weights, cfg.in_features)
+        bits = jnp.where(flip[:, None], 1 - bits, bits)
+        return packing.pack_bits(bits)
+    if cfg.mode == "binary":
+        return jnp.where(flip[:, None], 1 - weights, weights).astype(weights.dtype)
+    w = streamline_signs(weights.astype(jnp.int32), flip)
+    return w.astype(weights.dtype)
+
+
+def fuse_epilogues(graph: Graph) -> Graph:
+    """Fold batchnorm/quant_act successors of *finalized* MVU nodes into the
+    kernel's multi-threshold epilogue.
+
+    :func:`streamline` does this rewrite at lowering time on float weights;
+    this pass is its runtime-engine analog for graphs that kept standalone
+    ``batchnorm``/``quant_act`` nodes (the unfused interpreter path).  The
+    dequant scale already attached to the MVU (``out_scale``) folds into the
+    thresholds, so the fused node emits integer activation levels straight
+    from the accumulator — no float epilogue nodes remain in the hot path.
+
+    Handled patterns (the head MVU and anything else pass through):
+        [mvu, batchnorm, quant_act] -> mvu(+thresholds)
+        [mvu, quant_act]            -> mvu(+thresholds)   (identity BN)
+    """
+    from repro.core.mvu import MVUParams
+
+    out: Graph = []
+    i = 0
+    while i < len(graph):
+        node = graph[i]
+        fusable = (
+            node.op == "mvu"
+            and "mvu" in node.params
+            and node.params["mvu"].thresholds is None
+        )
+        bn = None
+        qa = None
+        if fusable:
+            nxt = graph[i + 1] if i + 1 < len(graph) else None
+            if nxt is not None and nxt.op == "batchnorm":
+                bn = nxt
+                nxt = graph[i + 2] if i + 2 < len(graph) else None
+            if nxt is not None and nxt.op == "quant_act":
+                qa = nxt
+        if qa is None:
+            out.append(node)
+            i += 1
+            continue
+
+        cfg: MVUConfig = node.attrs["config"]
+        params: MVUParams = node.params["mvu"]
+        n = cfg.out_features
+        bits = qa.attrs["bits"]
+        if bn is not None:
+            gamma, beta = bn.params["gamma"], bn.params["beta"]
+            mean, var = bn.params["mean"], bn.params["var"]
+        else:
+            # identity BN: var = 1 - eps so sqrt(var + eps) == 1 exactly and
+            # the thresholds reduce to the bare quantizer boundaries.
+            gamma = jnp.ones((n,), jnp.float32)
+            beta = jnp.zeros((n,), jnp.float32)
+            mean = jnp.zeros((n,), jnp.float32)
+            var = jnp.ones((n,), jnp.float32) - 1e-5
+        t, flip = bn_quant_thresholds(
+            gamma, beta, mean, var,
+            bits=bits, acc_scale=1.0,
+            act_scale=qa.attrs.get("act_scale", 1.0),
+        )
+        # thresholds hold on the real accumulator; the kernel compares the
+        # integer accumulator, so divide per-row by the dequant scale.
+        scale = params.out_scale
+        if scale is not None:
+            t = t / scale.reshape(-1)[:, None]
+        from repro.core.thresholds import integerize_thresholds
+
+        w = _flip_weight_rows(params.weights, flip, cfg)
+        fused_params = MVUParams(
+            weights=w, thresholds=integerize_thresholds(t), out_scale=None
+        )
+        cfg2 = MVUConfig(**{**cfg.__dict__, "act_bits": bits})
+        attrs = dict(node.attrs)
+        attrs["config"] = cfg2
+        attrs["fused"] = tuple(x.name for x in (bn, qa) if x is not None)
+        out.append(Node("mvu", node.name, attrs, {"mvu": fused_params}))
+        i += 3 if bn is not None else 2
+    return out
+
+
 def apply_folding(graph: Graph, *, target_cycles: int | None = None,
                   max_pe: int = 128, max_simd: int = 128) -> Graph:
     """FINN folding pass: rate-balance all MVU stages (DESIGN.md section 4)."""

@@ -19,6 +19,11 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams across 0.4.x/0.5.x; resolve
+# whichever this jax ships so the kernels stay version-agnostic.
+CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
 
 
 def swar_popcount(x: jax.Array) -> jax.Array:

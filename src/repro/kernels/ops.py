@@ -49,6 +49,29 @@ def xnor_mxu(
     return mvu_int_pallas(a, w, thresholds, out_scale, interpret=default_interpret())
 
 
+def mvu_layer_fn(mode: str = "standard", *, backend: str = "pallas", **blocks):
+    """Stage callable for the streaming executors: ``fn(params, x) -> y``.
+
+    ``params`` is a dict with ``"w"`` (N, K) plus optionally ``"t"``
+    (thresholds) or ``"s"`` (out_scale) — the stackable form used by
+    ``repro.core.engine.FusedEngine.as_pipeline`` to run one MVU per
+    pipeline stage through ``repro.distributed.pipeline.pipeline_apply``.
+    """
+
+    def fn(params, x):
+        return mvu(
+            x,
+            params["w"],
+            mode,
+            thresholds=params.get("t"),
+            out_scale=params.get("s"),
+            backend=backend,
+            **blocks,
+        )
+
+    return fn
+
+
 def mvu(
     a: jax.Array,
     w: jax.Array,

@@ -23,6 +23,16 @@ def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     return jax.make_mesh(shape, axes)
 
 
+def use_mesh(mesh):
+    """Context manager activating ``mesh``, across jax versions.
+
+    ``jax.set_mesh`` only exists on newer jax; a ``Mesh`` has always been
+    its own context manager, so fall back to entering it directly.
+    """
+    set_mesh = getattr(jax, "set_mesh", None)
+    return set_mesh(mesh) if set_mesh is not None else mesh
+
+
 def data_axes(mesh) -> tuple[str, ...]:
     """Axes the batch is sharded over (pod folds into data-parallelism)."""
     names = mesh.axis_names

@@ -8,13 +8,16 @@ and decoded to completion) used by examples/serve_lm.py.
 Long-context SP: with ``seq_over_model=True`` the KV cache's sequence dim
 shards over "model" and GSPMD inserts the partial-softmax combine
 (flash-decode style) -- used for the long_500k cells.
+
+``EngineServer`` is the dataflow-graph counterpart: a request-coalescing,
+shape-bucketed front-end over ``repro.core.engine.FusedEngine`` (used by the
+NID example and benchmarks/engine_throughput.py).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -51,6 +54,69 @@ def shard_serve_fns(model: Model, mesh, batch: int, max_len: int,
         donate_argnums=(1,),
     )
     return prefill, decode, p_shard, s_shard
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    rid: int
+    x: np.ndarray  # one sample, engine input shape minus the batch dim
+    t_submit: float = 0.0
+    t_done: float = 0.0
+    out: np.ndarray | None = None
+
+
+class EngineServer:
+    """Batched serving front-end for ``repro.core.engine.FusedEngine``.
+
+    Requests coalesce into padded shape buckets: a flush pads each pending
+    group up to the smallest bucket batch that holds it, so the engine's jit
+    cache sees only ``len(batch_buckets)`` executables no matter the traffic
+    pattern (the serving analog of the dry-run's fixed shape grid).  Oversize
+    groups split into max-bucket chunks.
+    """
+
+    def __init__(self, engine, *, batch_buckets: tuple[int, ...] = (1, 8, 32, 128)):
+        if not batch_buckets or any(b <= 0 for b in batch_buckets):
+            raise ValueError(f"need positive bucket sizes, got {batch_buckets}")
+        self.engine = engine
+        self.buckets = tuple(sorted(set(batch_buckets)))
+        self._pending: list[EngineRequest] = []
+        self._next_rid = 0
+        self.stats = {"requests": 0, "flushes": 0, "padded_samples": 0}
+
+    def submit(self, x: np.ndarray) -> int:
+        """Queue one sample; returns its request id (resolved by flush)."""
+        rid = self._next_rid
+        self._next_rid += 1
+        self._pending.append(EngineRequest(rid, np.asarray(x), time.perf_counter()))
+        self.stats["requests"] += 1
+        return rid
+
+    def _bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        return self.buckets[-1]
+
+    def flush(self) -> list[EngineRequest]:
+        """Coalesce pending requests, run the engine, scatter the results."""
+        done: list[EngineRequest] = []
+        while self._pending:
+            group = self._pending[: self.buckets[-1]]
+            self._pending = self._pending[len(group) :]
+            bucket = self._bucket_for(len(group))
+            xs = np.stack([r.x for r in group])
+            if bucket > len(group):  # pad up to the bucket's batch shape
+                pad = np.zeros((bucket - len(group),) + xs.shape[1:], xs.dtype)
+                xs = np.concatenate([xs, pad])
+                self.stats["padded_samples"] += bucket - len(group)
+            ys = np.asarray(self.engine(jnp.asarray(xs)))
+            t1 = time.perf_counter()
+            for r, y in zip(group, ys):
+                r.out, r.t_done = y, t1
+            done.extend(group)
+            self.stats["flushes"] += 1
+        return done
 
 
 @dataclasses.dataclass

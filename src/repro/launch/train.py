@@ -11,7 +11,6 @@ parameter PartitionSpecs in distributed/sharding.py.
 from __future__ import annotations
 
 import argparse
-import functools
 import time
 
 import jax

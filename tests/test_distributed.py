@@ -237,14 +237,14 @@ def test_dryrun_cell_lowers_on_host_mesh():
         jax.devices()  # lock 8 host devices before importing dryrun
         from repro.launch import dryrun
         from repro.configs import get_reduced
-        from repro.launch.mesh import make_host_mesh
+        from repro.launch.mesh import make_host_mesh, use_mesh
 
         mesh = make_host_mesh((4, 2))
         for arch in ["yi-9b", "granite-moe-3b-a800m", "mamba2-780m"]:
             cfg = get_reduced(arch)
             fn, args, donate, shardings, cfg, acct = dryrun.build_cell(
                 cfg, "train_4k", mesh)
-            with jax.set_mesh(mesh):
+            with use_mesh(mesh):
                 compiled = jax.jit(fn, in_shardings=shardings,
                                    donate_argnums=donate).lower(*args).compile()
             cost = compiled.cost_analysis()

@@ -6,7 +6,6 @@ import os
 import tempfile
 
 import numpy as np
-import pytest
 import jax
 import jax.numpy as jnp
 
