@@ -1,0 +1,146 @@
+"""Fused streaming conv path vs the eager interpreter on the CNV topology.
+
+Two executions of the same lowered+finalized CNV graph (conv layers keep
+standalone batchnorm/quant_act nodes, the unfused form):
+
+  unfused   ``dataflow.execute``: one dispatch per node; every conv runs
+            SWU-then-MVU with the full (B, OH*OW, Kd^2*C) im2col matrix
+            materialized between them -- the buffering blow-up FINN's
+            line-buffer SWU exists to avoid
+  fused     ``FusedEngine``: bn/quant folded into threshold epilogues,
+            swu+mvu pairs collapsed into the line-buffer conv kernel
+            (``kernels.swu_mvu``), whole chain one jit'd microbatch stream
+
+Emits one JSON record (default experiments/bench/conv_throughput.json) with
+both timings, the speedup, the bit-exactness flag, and the analytic
+peak-activation-memory comparison (im2col bytes vs line-buffer resident
+bytes at the worst conv layer).  ``--quick`` shrinks batch/reps for CI.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import paired_times
+from repro.configs import cnv_bnn
+from repro.core import dataflow, ir, lowering
+from repro.core.engine import FusedEngine
+
+
+def build_cnv_graph(spec=cnv_bnn.QUICK, *, mode: str = "xnor", seed: int = 0):
+    g = cnv_bnn.build_graph(spec, seed=seed)
+    lowered = lowering.lower_to_mvu(
+        g, mode=mode, weight_bits=spec.weight_bits, act_bits=spec.act_bits)
+    return lowering.finalize(lowered)
+
+
+def conv_memory_model(engine: FusedEngine, batch: int, microbatch: int) -> dict:
+    """Analytic peak activation bytes at the worst conv layer.
+
+    Interpreter: the SWU materializes the whole im2col matrix (int32 gather
+    output) for the full batch before the MVU consumes it.  Fused kernel:
+    one (H, W, C) int8 image tile plus one (rt*OW, K) int8 window tile per
+    microbatch -- the line-buffer residency.
+    """
+    im2col = fused = 0
+    shape = None
+    for node in engine.graph:
+        in_shape = shape
+        shape = ir.propagate(shape, node)
+        if node.op != "conv_mvu":
+            continue
+        h, w, c = in_shape
+        oh, ow, _ = shape
+        kd = node.attrs["kernel"]
+        pad = node.attrs["pad"]
+        k = kd * kd * c
+        im2col = max(im2col, batch * oh * ow * k * 4)
+        cfg = node.attrs["config"]
+        rt = max(1, min(oh, -(-cfg.block_m // ow)))
+        resident = (h + 2 * pad) * (w + 2 * pad) * c + rt * ow * k
+        fused = max(fused, microbatch * resident)
+    return {
+        "im2col_peak_bytes": im2col,
+        "fused_peak_bytes": fused,
+        "peak_memory_ratio": (im2col / fused) if fused else 0.0,
+    }
+
+
+def run(*, batch: int = 256, reps: int = 5, seed: int = 0, mode: str = "xnor",
+        spec=None, quick: bool = False,
+        out: str | None = "experiments/bench/conv_throughput.json") -> dict:
+    if spec is None:
+        spec = cnv_bnn.QUICK if quick else cnv_bnn.FULL
+    graph = build_cnv_graph(spec, mode=mode, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    x = jnp.asarray(
+        rng.integers(0, 2**spec.act_bits, (batch, spec.image, spec.image, 3)),
+        jnp.int32)
+
+    engine = FusedEngine(graph)
+    plan = engine.plan(batch)
+
+    want = np.asarray(dataflow.execute(graph, x))
+    got = np.asarray(engine(x))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    t_unfused, t_fused, speedup = paired_times(
+        lambda v: dataflow.execute(graph, v), engine, x, reps=reps)
+
+    n_conv = sum(1 for n in engine.graph if n.op == "conv_mvu")
+    record = {
+        "config": f"cnv_bnn_{spec.image}px_{'x'.join(map(str, spec.channels))}",
+        "mode": mode,
+        "batch": batch,
+        "reps": reps,
+        "unfused_us": t_unfused * 1e6,
+        "fused_us": t_fused * 1e6,
+        "speedup": speedup,
+        "unfused_samples_per_s": batch / t_unfused,
+        "fused_samples_per_s": batch / t_fused,
+        "n_micro": plan.n_micro,
+        "microbatch": plan.microbatch,
+        "interval_cycles": plan.interval_cycles,
+        "bottleneck": engine.schedule.bottleneck.name,
+        "conv_stages": n_conv,
+        "bit_exact": bool(np.array_equal(got, want)),
+        **conv_memory_model(engine, batch, plan.microbatch),
+    }
+    if out:
+        out_dir = os.path.dirname(out)
+        if out_dir:
+            os.makedirs(out_dir, exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(record, f, indent=2)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--batch", type=int, default=256)
+    ap.add_argument("--reps", type=int, default=5)
+    ap.add_argument("--mode", default="xnor",
+                    choices=("xnor", "binary", "standard"))
+    ap.add_argument("--quick", action="store_true",
+                    help="CI-sized CNV + small batch / few reps")
+    ap.add_argument("--out", default="experiments/bench/conv_throughput.json")
+    args = ap.parse_args()
+    if args.quick:
+        # 5 reps + best-of timing for stability under the regression gate
+        args.batch, args.reps = min(args.batch, 64), 5
+
+    rec = run(batch=args.batch, reps=args.reps, mode=args.mode,
+              quick=args.quick, out=args.out)
+    print(json.dumps(rec, indent=2))
+    print(f"# fused {rec['fused_us']:.0f}us vs unfused {rec['unfused_us']:.0f}us "
+          f"-> {rec['speedup']:.2f}x, peak-mem ratio "
+          f"{rec['peak_memory_ratio']:.1f}x at {rec['bottleneck']}")
+
+
+if __name__ == "__main__":
+    main()

@@ -24,7 +24,7 @@ import os
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import time_call
+from benchmarks.common import paired_times
 from repro.configs import nid_mlp
 from repro.core import dataflow, lowering
 from repro.core.engine import FusedEngine
@@ -74,8 +74,8 @@ def run(*, batch: int = 4096, reps: int = 5, seed: int = 0,
     got = np.asarray(engine(x))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
-    t_unfused = time_call(lambda v: dataflow.execute(graph, v), x, reps=reps)
-    t_fused = time_call(engine, x, reps=reps)
+    t_unfused, t_fused, speedup = paired_times(
+        lambda v: dataflow.execute(graph, v), engine, x, reps=reps)
 
     record = {
         "config": "nid_mlp_600_64_64_64_1_2bit",
@@ -83,7 +83,7 @@ def run(*, batch: int = 4096, reps: int = 5, seed: int = 0,
         "reps": reps,
         "unfused_us": t_unfused * 1e6,
         "fused_us": t_fused * 1e6,
-        "speedup": t_unfused / t_fused,
+        "speedup": speedup,
         "unfused_samples_per_s": batch / t_unfused,
         "fused_samples_per_s": batch / t_fused,
         "n_micro": plan.n_micro,
@@ -112,7 +112,9 @@ def main() -> None:
     ap.add_argument("--out", default="experiments/bench/engine_throughput.json")
     args = ap.parse_args()
     if args.quick:
-        args.batch, args.reps = min(args.batch, 512), 2
+        # 5 reps + best-of timing: the regression gate needs a stable
+        # estimator on loaded CI runners to hold a 20% threshold.
+        args.batch, args.reps = min(args.batch, 512), 5
 
     rec = run(batch=args.batch, reps=args.reps, out=args.out)
     print(json.dumps(rec, indent=2))

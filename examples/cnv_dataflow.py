@@ -1,0 +1,49 @@
+"""CNV (the FINN BNN convnet) streaming through the fused dataflow engine.
+
+The conv quickstart: build the CNV topology (conv/conv/pool/.../dense),
+lower conv layers to SWU+MVU pairs, and let ``FusedEngine`` collapse them
+into line-buffer conv kernels -- the whole network runs as ONE jit'd
+microbatch stream, bit-exact with the eager behavioural interpreter, and
+the (B, OH*OW, Kd^2*C) im2col matrix never materializes.
+
+Run:  PYTHONPATH=src python examples/cnv_dataflow.py
+"""
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.configs import cnv_bnn
+from repro.core import dataflow, lowering
+from repro.core.engine import FusedEngine
+
+
+def main():
+    spec = cnv_bnn.QUICK  # 1/8-channel CNV on 16x16 inputs; FULL = the real one
+    graph = cnv_bnn.build_graph(spec, seed=0)
+    lowered = lowering.lower_to_mvu(
+        graph, mode="xnor", weight_bits=spec.weight_bits, act_bits=spec.act_bits)
+    fin = lowering.apply_folding(lowering.finalize(lowered))
+
+    engine = FusedEngine(fin)  # fuses bn/quant epilogues, then swu+mvu pairs
+    ops_left = [n.op for n in engine.graph]
+    print(f"[cnv] lowered ops: {ops_left}")
+    print(f"[cnv] schedule: {engine.schedule.summary()}")
+
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(
+        rng.integers(0, 2**spec.act_bits, (32, spec.image, spec.image, 3)),
+        jnp.int32)
+    plan = engine.plan(x.shape[0])
+    print(f"[cnv] stream plan: {plan.n_micro} microbatches of "
+          f"{plan.microbatch} image(s), II = {plan.interval_cycles} cycles")
+
+    logits = np.asarray(engine(x))
+    want = np.asarray(dataflow.execute(fin, x))
+    assert np.array_equal(logits, want), "engine diverged from interpreter"
+    print(f"[cnv] logits {logits.shape}, bit-exact with dataflow.execute")
+    print(f"[cnv] predictions: {logits.argmax(-1)[:10]} ...")
+    print("OK: CNV streamed through the fused conv path")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,102 @@
+"""Benchmark regression gate: fresh quick-bench JSONs vs committed baselines.
+
+Usage:
+    python scripts/check_bench_regression.py BASELINE_DIR FRESH_DIR \
+        [--max-regression 0.20] [--min-speedup 2.0]
+
+For every ``*.json`` baseline record, the matching fresh record must
+
+  * be bit-exact (``bit_exact`` true) when the baseline asserts it,
+  * keep ``speedup`` (fused-vs-interpreter, the machine-normalized
+    throughput metric -- absolute samples/s varies across CI runners)
+    within ``--max-regression`` of the baseline.
+
+The absolute ``--min-speedup`` floor is enforced on the committed baseline
+itself (the performance claim the repo ships), not the fresh run, so a
+noisy runner can only trip the relative band, never an implicitly tighter
+absolute one.
+
+Absolute samples/s numbers from both runs are printed for the log but not
+gated.  Exits non-zero on the first failure so CI fails the build.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+
+
+def check_record(name: str, base: dict, fresh: dict, *,
+                 max_regression: float, min_speedup: float) -> list[str]:
+    errors = []
+    if base.get("bit_exact") and not fresh.get("bit_exact"):
+        errors.append(f"{name}: fused engine diverged from the interpreter")
+    b_speed, f_speed = base.get("speedup"), fresh.get("speedup")
+    if b_speed is not None and f_speed is not None:
+        # min_speedup applies to the *committed* baseline (the claim the repo
+        # makes); the fresh run is held to the relative band only, so the
+        # absolute floor cannot silently shrink the advertised tolerance on
+        # noisy runners.
+        if b_speed < min_speedup:
+            errors.append(
+                f"{name}: committed baseline speedup {b_speed:.2f}x is below "
+                f"the {min_speedup:.1f}x floor -- refresh the baseline")
+        floor = b_speed * (1.0 - max_regression)
+        if f_speed < floor:
+            errors.append(
+                f"{name}: speedup {f_speed:.2f}x regressed >"
+                f"{max_regression:.0%} vs baseline {b_speed:.2f}x "
+                f"(floor {floor:.2f}x)")
+    for key in ("fused_samples_per_s", "unfused_samples_per_s"):
+        if key in base or key in fresh:
+            print(f"  {name}.{key}: baseline={base.get(key, float('nan')):.0f} "
+                  f"fresh={fresh.get(key, float('nan')):.0f}  (informational)")
+    return errors
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("baseline_dir", type=pathlib.Path)
+    ap.add_argument("fresh_dir", type=pathlib.Path)
+    ap.add_argument("--max-regression", type=float, default=0.20,
+                    help="allowed fractional speedup drop vs baseline")
+    ap.add_argument("--min-speedup", type=float, default=2.0,
+                    help="absolute fused-vs-interpreter floor")
+    args = ap.parse_args()
+
+    baselines = sorted(args.baseline_dir.glob("*.json"))
+    if not baselines:
+        print(f"no *.json baselines under {args.baseline_dir}", file=sys.stderr)
+        return 2
+    errors: list[str] = []
+    for path in baselines:
+        fresh_path = args.fresh_dir / path.name
+        if not fresh_path.exists():
+            errors.append(f"{path.name}: fresh run missing ({fresh_path})")
+            continue
+        base = json.loads(path.read_text())
+        fresh = json.loads(fresh_path.read_text())
+        errs = check_record(path.name, base, fresh,
+                            max_regression=args.max_regression,
+                            min_speedup=args.min_speedup)
+        status = "FAIL" if errs else "ok"
+        print(f"[{status}] {path.name}: speedup "
+              f"{base.get('speedup', 0):.2f}x -> {fresh.get('speedup', 0):.2f}x")
+        errors.extend(errs)
+    # the reverse direction: a fresh record with no committed baseline means
+    # a benchmark silently escaped the gate (e.g. a forgotten git add)
+    known = {p.name for p in baselines}
+    for fresh_path in sorted(args.fresh_dir.glob("*.json")):
+        if fresh_path.name not in known:
+            errors.append(
+                f"{fresh_path.name}: fresh record has no committed baseline "
+                f"under {args.baseline_dir} -- commit one or drop the run")
+    for e in errors:
+        print(f"REGRESSION: {e}", file=sys.stderr)
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

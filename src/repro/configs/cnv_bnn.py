@@ -1,0 +1,92 @@
+"""CNV: the FINN BNN convnet topology (BNN-PYNQ's CIFAR-10 network).
+
+The paper's MVU always sits behind the SWU for conv layers (Fig. 1); CNV is
+the canonical FINN workload exercising that pairing: six 3x3 conv layers
+(64, 64, 128, 128, 256, 256 channels, no padding) with 2x2 max-pools after
+conv pairs, then three dense layers (512, 512, 10) -- all with fused
+BN + quantized activations between compute layers.
+
+``build_graph`` emits the unlowered IR chain with trained-like random
+parameters; ``QUICK`` is a channel/image-scaled variant small enough for CI
+smoke runs (same shape of topology: >=2 conv + pool + dense).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.ir import Graph, Node
+
+
+@dataclasses.dataclass(frozen=True)
+class CNVSpec:
+    image: int  # input is (image, image, 3)
+    channels: tuple[int, ...]  # conv channels, 3x3 / stride 1 / pad 0 each
+    pool_after: tuple[int, ...]  # conv indices followed by a 2x2 max-pool
+    fc: tuple[int, ...]  # dense widths; the last one is the classifier head
+    weight_bits: int = 1
+    act_bits: int = 1
+
+
+# The full FINN CNV: 32x32x3 -> 1x1x256 through the conv stack, then the
+# 512-512-10 classifier.
+FULL = CNVSpec(
+    image=32,
+    channels=(64, 64, 128, 128, 256, 256),
+    pool_after=(1, 3),
+    fc=(512, 512, 10),
+)
+
+# CI-sized CNV: same topology shape at 1/8 the channels on 16x16 inputs.
+QUICK = CNVSpec(
+    image=16,
+    channels=(8, 8, 16, 16),
+    pool_after=(1,),
+    fc=(64, 10),
+)
+
+
+def _bn(rng, name: str, n: int) -> Node:
+    return Node("batchnorm", name, {}, {
+        "gamma": jnp.asarray(rng.uniform(-1.5, 1.5, n).astype(np.float32)),
+        "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
+        "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+        "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
+    })
+
+
+def build_graph(spec: CNVSpec = QUICK, *, seed: int = 0) -> Graph:
+    """CNV as an IR chain with trained-like random weights.
+
+    Every conv/dense layer (except the classifier head) is followed by
+    batchnorm + quant_act, the pattern ``lowering.streamline`` /
+    ``lowering.fuse_epilogues`` folds into MVU threshold epilogues.
+    """
+    rng = np.random.default_rng(seed)
+    bits = spec.act_bits
+    g: Graph = [Node("input", "in",
+                     {"shape": (spec.image, spec.image, 3), "bits": bits})]
+    size, cin = spec.image, 3
+    for i, cout in enumerate(spec.channels):
+        w = rng.normal(0, 0.5, (3, 3, cin, cout)).astype(np.float32)
+        g.append(Node("conv", f"conv{i}", {"kernel": 3, "stride": 1, "pad": 0},
+                      {"w": jnp.asarray(w)}))
+        g.append(_bn(rng, f"bn_c{i}", cout))
+        g.append(Node("quant_act", f"act_c{i}", {"bits": bits, "act_scale": 1.0}))
+        size, cin = size - 2, cout
+        if i in spec.pool_after:
+            g.append(Node("maxpool", f"pool{i}", {"size": 2}))
+            size //= 2
+    g.append(Node("flatten", "flatten", {}))
+    k = size * size * cin
+    for i, n in enumerate(spec.fc):
+        w = (rng.normal(0, 1, (n, k)) / np.sqrt(k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(spec.fc) - 1:
+            g.append(_bn(rng, f"bn_f{i}", n))
+            g.append(Node("quant_act", f"act_f{i}", {"bits": bits, "act_scale": 1.0}))
+        k = n
+    return g

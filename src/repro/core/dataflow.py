@@ -19,11 +19,11 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
-from repro.core import swu as swu_mod
+from repro.core import ir, swu as swu_mod
 from repro.core.ir import Graph
 from repro.core.mvu import MVUConfig, MVULayer
 from repro.core.resource_model import MVUResources
-from repro.kernels import packing
+from repro.kernels import ops, packing
 
 
 @dataclasses.dataclass
@@ -32,6 +32,8 @@ class StageInfo:
     cycles: int
     resources: MVUResources
     fifo_depth: int
+    n_pixels: int = 1  # output pixels per sample (conv stages; 1 for dense)
+    block_m: int = 128  # resident M tile of the stage's kernel
 
 
 @dataclasses.dataclass
@@ -67,19 +69,10 @@ def schedule(graph: Graph) -> DataflowSchedule:
     stages: list[StageInfo] = []
     prev_cycles = None
     for node in graph:
-        if node.op == "input":
-            shape = node.attrs["shape"]
-        elif node.op == "swu":
-            h, w, c = shape
-            kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
-            shape = (
-                swu_mod.out_dim(h, kd, st, pd),
-                swu_mod.out_dim(w, kd, st, pd),
-                kd * kd * c,
-            )
-        elif node.op == "mvu":
+        shape = ir.propagate(shape, node)
+        if node.op in ("mvu", "conv_mvu"):
             cfg: MVUConfig = node.attrs["config"]
-            px = shape[0] * shape[1] if (isinstance(shape, tuple) and len(shape) == 3) else 1
+            px = ir.n_pixels(shape)
             layer = MVULayer(cfg)
             res = layer.resources(n_pixels=px)
             # FIFO sizing: enough to absorb one producer burst while the
@@ -88,10 +81,9 @@ def schedule(graph: Graph) -> DataflowSchedule:
             burst = fold.pe  # outputs produced per cycle group
             drain = 1 if prev_cycles is None else max(1, res.cycles // max(prev_cycles, 1))
             fifo = max(2, burst * min(drain, 8))
-            stages.append(StageInfo(node.name, res.cycles, res, fifo))
+            stages.append(StageInfo(node.name, res.cycles, res, fifo,
+                                    n_pixels=px, block_m=cfg.block_m))
             prev_cycles = res.cycles
-            if isinstance(shape, tuple) and len(shape) == 3:
-                shape = (shape[0], shape[1], cfg.out_features)
     return DataflowSchedule(stages)
 
 
@@ -107,7 +99,49 @@ def node_runner(node):
         return None, lambda p, x: x
     if node.op == "swu":
         kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
-        return None, lambda p, x: swu_mod.sliding_window(x, kd, st, pd)  # (B, P, K)
+
+        def run_swu(p, x):
+            # keep the spatial layout so conv stages chain: (B, OH, OW, K)
+            b, h, w, _ = x.shape
+            cols = swu_mod.sliding_window(x, kd, st, pd)  # (B, P, K)
+            oh = swu_mod.out_dim(h, kd, st, pd)
+            ow = swu_mod.out_dim(w, kd, st, pd)
+            return cols.reshape(b, oh, ow, cols.shape[-1])
+
+        return None, run_swu
+    if node.op == "conv_mvu":
+        cfg: MVUConfig = node.attrs["config"]
+        kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
+
+        def run_conv(p, x):
+            b, h, w, _ = x.shape
+            out = ops.conv_mvu(
+                x, p.weights,
+                kernel=kd, stride=st, pad=pd, mode=cfg.mode,
+                k_bits=cfg.in_features if cfg.mode == "xnor" else None,
+                thresholds=p.thresholds, out_scale=p.out_scale,
+                backend=cfg.backend, **cfg.kernel_blocks(),
+            )  # (B, OH*OW, N)
+            oh = swu_mod.out_dim(h, kd, st, pd)
+            ow = swu_mod.out_dim(w, kd, st, pd)
+            return out.reshape(b, oh, ow, cfg.out_features)
+
+        return node.params["mvu"], run_conv
+    if node.op == "maxpool":
+        size = node.attrs["size"]
+        st = node.attrs.get("stride", size)
+
+        def run_pool(p, x):
+            init = x.dtype.type(jnp.iinfo(x.dtype).min) if jnp.issubdtype(
+                x.dtype, jnp.integer) else x.dtype.type(-jnp.inf)
+            return jax.lax.reduce_window(
+                x, init, jax.lax.max,
+                (1, size, size, 1), (1, st, st, 1), "VALID",
+            )
+
+        return None, run_pool
+    if node.op == "flatten":
+        return None, lambda p, x: x.reshape(x.shape[0], -1)
     if node.op == "mvu":
         cfg: MVUConfig = node.attrs["config"]
         layer = MVULayer(cfg)

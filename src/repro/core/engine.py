@@ -79,7 +79,11 @@ class FusedEngine:
 
     def __init__(self, graph: Graph, *, fuse: bool = True,
                  microbatches: int | None = None):
-        self.graph: Graph = lowering.fuse_epilogues(graph) if fuse else list(graph)
+        g: Graph = lowering.fuse_epilogues(graph) if fuse else list(graph)
+        # swu+mvu pairs collapse into the line-buffer conv kernel, so the
+        # im2col matrix never materializes between stages (FINN's SWU->MVU
+        # AXI stream; the conv analog of epilogue fusion).
+        self.graph = lowering.fuse_swu(g) if fuse else g
         self.schedule = dataflow.schedule(self.graph)
         runners = [dataflow.node_runner(n) for n in self.graph]
         self._fns = tuple(fn for _, fn in runners)
@@ -106,8 +110,11 @@ class FusedEngine:
             interval = s.steady_state_interval if s.stages else 0
             return StreamPlan(1, max(batch, 1), interval, 0)
         fifo_bound = max(2, min(st.fifo_depth for st in s.stages))
-        mvu_cfgs = [n.attrs["config"] for n in self.graph if n.op == "mvu"]
-        tile = min(c.block_m for c in mvu_cfgs)
+        # Samples per burst: a dense stage's kernel holds block_m samples per
+        # M tile; a conv stage's M tile holds block_m *pixels*, i.e.
+        # block_m // n_pixels whole images -- the conv bottleneck sets the
+        # microbatch for the whole chain.
+        tile = min(max(1, st.block_m // st.n_pixels) for st in s.stages)
         n_micro = max(1, min(math.ceil(batch / tile), batch))
         if self._microbatches is not None:
             n_micro = max(1, min(self._microbatches, batch))

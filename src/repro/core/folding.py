@@ -37,6 +37,11 @@ class Folding:
         sf = -(-k // self.simd)
         return n_pixels * nf * sf
 
+    def conv_cycles(self, n: int, k: int, oh: int, ow: int) -> int:
+        """Paper Eq. 1 over the pixel dimension: the SWU feeds one K-window
+        per output pixel, so a conv layer costs OH*OW * NF * SF cycles."""
+        return self.cycles(n, k, n_pixels=oh * ow)
+
     def validate(self, n: int, k: int) -> None:
         if n % self.pe:
             raise ValueError(f"PE={self.pe} must divide N={n}")

@@ -12,8 +12,12 @@ Supported ops:
     linear           attrs: -; params: w (N, K) float
     batchnorm        params: gamma, beta, mean, var
     quant_act        attrs: bits, act_scale
+    maxpool          attrs: size, stride (defaults to size)
+    flatten          attrs: -
     swu              attrs: kernel, stride, pad  (after lowering)
     mvu              attrs: MVUConfig; params: MVUParams (after lowering)
+    conv_mvu         attrs: MVUConfig + kernel/stride/pad; params: MVUParams
+                     (after ``lowering.fuse_swu`` collapses a swu+mvu pair)
 """
 
 from __future__ import annotations
@@ -32,14 +36,63 @@ class Node:
 
 Graph = list
 
+KNOWN_OPS = {
+    "input", "conv", "linear", "batchnorm", "quant_act",
+    "maxpool", "flatten", "swu", "mvu", "conv_mvu",
+}
+
 
 def validate_chain(graph: Graph) -> None:
     if not graph or graph[0].op != "input":
         raise ValueError("graph must start with an input node")
-    known = {"input", "conv", "linear", "batchnorm", "quant_act", "swu", "mvu"}
     for node in graph:
-        if node.op not in known:
+        if node.op not in KNOWN_OPS:
             raise ValueError(f"unknown op {node.op!r} ({node.name})")
+
+
+def propagate(shape: tuple, node: Node) -> tuple:
+    """Track the activation shape through one node.
+
+    Spatial activations are ``(H, W, C)`` tuples, flat ones ``(K,)`` -- the
+    shared shape algebra behind ``lowering.apply_folding``,
+    ``dataflow.schedule``, and the engine's stream planning.
+    """
+    if node.op == "input":
+        return tuple(node.attrs["shape"])
+    if node.op in ("conv", "swu", "conv_mvu", "maxpool"):
+        from repro.core.swu import out_dim as _conv_out  # shared size algebra
+
+        h, w = shape[0], shape[1]
+        if node.op == "maxpool":
+            kd = node.attrs["size"]
+            st, pd = node.attrs.get("stride", kd), 0
+        else:
+            kd = node.attrs["kernel"]
+            st, pd = node.attrs["stride"], node.attrs["pad"]
+        oh, ow = _conv_out(h, kd, st, pd), _conv_out(w, kd, st, pd)
+        if node.op == "swu":
+            return (oh, ow, kd * kd * shape[2])
+        if node.op == "maxpool":
+            return (oh, ow, shape[2])
+        n = (node.params["w"].shape[-1] if node.op == "conv"
+             else node.attrs["config"].out_features)
+        return (oh, ow, n)
+    if node.op == "flatten":
+        size = 1
+        for d in shape:
+            size *= d
+        return (size,)
+    if node.op == "linear":
+        return (node.params["w"].shape[0],)
+    if node.op == "mvu":
+        n = node.attrs["config"].out_features
+        return (*shape[:-1], n) if len(shape) == 3 else (n,)
+    return shape  # batchnorm / quant_act keep the shape
+
+
+def n_pixels(shape: tuple) -> int:
+    """Output pixels an MVU processes per sample (1 for flat activations)."""
+    return shape[0] * shape[1] if len(shape) == 3 else 1
 
 
 def find(graph: Graph, op: str) -> list[Node]:

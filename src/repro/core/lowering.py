@@ -2,29 +2,20 @@
 
     lower_to_mvu:   conv -> [swu, mvu];  linear -> mvu
     streamline:     [mvu, batchnorm, quant_act] -> mvu(+thresholds)
-    apply_folding:  attach rate-balanced Folding to every mvu node
+    fuse_epilogues: same fold for finalized graphs (the runtime engine path)
+    fuse_swu:       [swu, mvu] -> conv_mvu (line-buffer fused conv kernel)
+    apply_folding:  attach rate-balanced Folding to every mvu/conv_mvu node
 """
 
 from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core import swu as swu_mod
+from repro.core import ir, swu as swu_mod
 from repro.core.folding import balance_pipeline
 from repro.core.ir import Graph, Node, validate_chain
 from repro.core.mvu import MVUConfig, MVULayer
 from repro.core.thresholds import bn_quant_thresholds, streamline_signs
-
-
-def _infer_pixels(shape, node: Node) -> tuple[tuple, int]:
-    """Track (spatial shape, K) through the chain for folding/cycle math."""
-    if node.op == "swu":
-        h, w, c = shape
-        kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
-        oh = swu_mod.out_dim(h, kd, st, pd)
-        ow = swu_mod.out_dim(w, kd, st, pd)
-        return (oh, ow, kd * kd * c), oh * ow
-    return shape, 1
 
 
 def lower_to_mvu(graph: Graph, *, mode: str = "standard",
@@ -169,7 +160,7 @@ def fuse_epilogues(graph: Graph) -> Graph:
     while i < len(graph):
         node = graph[i]
         fusable = (
-            node.op == "mvu"
+            node.op in ("mvu", "conv_mvu")
             and "mvu" in node.params
             and node.params["mvu"].thresholds is None
         )
@@ -221,29 +212,63 @@ def fuse_epilogues(graph: Graph) -> Graph:
         attrs = dict(node.attrs)
         attrs["config"] = cfg2
         attrs["fused"] = tuple(x.name for x in (bn, qa) if x is not None)
-        out.append(Node("mvu", node.name, attrs, {"mvu": fused_params}))
+        out.append(Node(node.op, node.name, attrs, {"mvu": fused_params}))
         i += 3 if bn is not None else 2
+    return out
+
+
+def fuse_swu(graph: Graph) -> Graph:
+    """Collapse ``[swu, mvu]`` pairs into one ``conv_mvu`` node.
+
+    The standalone SWU materializes the full (B, OH*OW, Kd^2*C) im2col
+    matrix in HBM before the MVU consumes it; the fused node streams sliding
+    windows through the line-buffer kernel (``kernels.swu_mvu``) instead --
+    the runtime analog of FINN's SWU->MVU AXI stream, where the interleaved
+    GEMM activation matrix never exists in memory.  Requires finalized MVU
+    nodes (``params["mvu"]``); run after :func:`finalize` /
+    :func:`fuse_epilogues`.
+    """
+    out: Graph = []
+    i = 0
+    while i < len(graph):
+        node = graph[i]
+        nxt = graph[i + 1] if i + 1 < len(graph) else None
+        if (
+            node.op == "swu"
+            and nxt is not None and nxt.op == "mvu"
+            and "mvu" in nxt.params
+        ):
+            attrs = dict(nxt.attrs)
+            attrs["kernel"] = node.attrs["kernel"]
+            attrs["stride"] = node.attrs["stride"]
+            attrs["pad"] = node.attrs["pad"]
+            name = nxt.name.replace(".mvu", ".conv_mvu")
+            out.append(Node("conv_mvu", name, attrs, nxt.params))
+            i += 2
+        else:
+            out.append(node)
+            i += 1
     return out
 
 
 def apply_folding(graph: Graph, *, target_cycles: int | None = None,
                   max_pe: int = 128, max_simd: int = 128) -> Graph:
-    """FINN folding pass: rate-balance all MVU stages (DESIGN.md section 4)."""
+    """FINN folding pass: rate-balance all MVU stages (DESIGN.md section 4).
+
+    Conv stages fold over the pixel dimension too: their cycle count is
+    ``n_pixels * NF * SF`` (paper Eq. 1 with the SWU feeding one window per
+    output pixel), so a conv layer with few channels but many pixels can
+    still be the rate bottleneck.
+    """
     shape = None
     shapes = []
     mvu_idx = []
     for i, node in enumerate(graph):
-        if node.op == "input":
-            shape = node.attrs["shape"]
-        elif node.op == "swu":
-            shape, _ = _infer_pixels(shape, node)
-        if node.op == "mvu":
+        shape = ir.propagate(shape, node)
+        if node.op in ("mvu", "conv_mvu"):
             cfg: MVUConfig = node.attrs["config"]
-            px = shape[0] * shape[1] if (isinstance(shape, tuple) and len(shape) == 3) else 1
-            shapes.append((cfg.out_features, cfg.in_features, px))
+            shapes.append((cfg.out_features, cfg.in_features, ir.n_pixels(shape)))
             mvu_idx.append(i)
-            if isinstance(shape, tuple) and len(shape) == 3:
-                shape = (shape[0], shape[1], cfg.out_features)
     folds = balance_pipeline(shapes, slowest_cycles=target_cycles,
                              max_pe=max_pe, max_simd=max_simd)
     for i, f in zip(mvu_idx, folds):

@@ -35,18 +35,20 @@ def swar_popcount(x: jax.Array) -> jax.Array:
     return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
 
 
-def epilogue_write(o_ref, acc, t_ref, s_ref) -> None:
-    """Write the MVTU epilogue: thresholds > scale > raw accumulator."""
+def epilogue_value(acc, t_ref, s_ref):
+    """MVTU epilogue as a value: thresholds > scale > raw accumulator."""
     if t_ref is not None:
         # act = sum_t (acc >= T[c, t]) -- the multi-threshold unit.
         thr = t_ref[...]  # (bn, T) int32
-        o_ref[...] = jnp.sum(
-            acc[:, :, None] >= thr[None, :, :], axis=-1, dtype=jnp.int32
-        )
-    elif s_ref is not None:
-        o_ref[...] = acc.astype(jnp.float32) * s_ref[...].reshape(1, -1)
-    else:
-        o_ref[...] = acc
+        return jnp.sum(acc[:, :, None] >= thr[None, :, :], axis=-1, dtype=jnp.int32)
+    if s_ref is not None:
+        return acc.astype(jnp.float32) * s_ref[...].reshape(1, -1)
+    return acc
+
+
+def epilogue_write(o_ref, acc, t_ref, s_ref) -> None:
+    """Write the MVTU epilogue: thresholds > scale > raw accumulator."""
+    o_ref[...] = epilogue_value(acc, t_ref, s_ref)
 
 
 def pad_to(x: jax.Array, axis: int, multiple: int, value=0) -> jax.Array:

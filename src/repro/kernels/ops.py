@@ -24,6 +24,7 @@ from repro.kernels._common import default_interpret
 from repro.kernels.mvu_binary import mvu_binary_pallas
 from repro.kernels.mvu_int import mvu_int_pallas
 from repro.kernels.mvu_xnor import mvu_xnor_pallas
+from repro.kernels.swu_mvu import conv_mvu_pallas
 
 MODES = ("xnor", "binary", "standard")
 BACKENDS = ("pallas", "xla")
@@ -70,6 +71,57 @@ def mvu_layer_fn(mode: str = "standard", *, backend: str = "pallas", **blocks):
         )
 
     return fn
+
+
+def conv_mvu(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    kernel: int,
+    stride: int = 1,
+    pad: int = 0,
+    mode: str = "standard",
+    k_bits: int | None = None,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    backend: str = "pallas",
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    block_kw: int = 8,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused SWU+MVU convolution: epilogue(SWU(x) . W^T) -> (B, OH*OW, N).
+
+    x: (B, H, W, C) integer activations ({0,1} bits for xnor); w: (N, Kd^2*C)
+    in (ky, kx, c) order -- ``standard`` integer rows, ``binary`` {0,1}-coded
+    +/-1 rows, ``xnor`` bit-packed (N, Wd) uint32 rows (``k_bits`` = Kd^2*C,
+    unpacked on the fly; the fused gather needs the true synapse axis).
+
+    backend="pallas" streams sliding windows through the line-buffer kernel
+    (no im2col in HBM); backend="xla" is the materializing reference.
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if backend not in BACKENDS:
+        raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
+    if interpret is None:
+        interpret = default_interpret()
+    if mode == "xnor":
+        assert k_bits is not None, "xnor mode requires k_bits"
+        w = packing.unpack_bits(w, k_bits).astype(jnp.int8)  # (N, K) {0,1}
+
+    if backend == "xla":
+        return ref.conv_mvu_ref(
+            x, w, kernel=kernel, stride=stride, pad=pad, mode=mode,
+            thresholds=thresholds, out_scale=out_scale,
+        )
+    del block_k, block_kw  # the fused gather keeps full K resident
+    return conv_mvu_pallas(
+        x, w, thresholds, out_scale,
+        kernel=kernel, stride=stride, pad=pad, mode=mode,
+        block_m=block_m, block_n=block_n, interpret=interpret,
+    )
 
 
 def mvu(

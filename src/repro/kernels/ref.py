@@ -70,6 +70,42 @@ def mvu_binary_ref(
     return _epilogue(acc, thresholds, out_scale)
 
 
+def conv_mvu_ref(
+    x: jax.Array,
+    w: jax.Array,
+    *,
+    kernel: int,
+    stride: int = 1,
+    pad: int = 0,
+    mode: str = "standard",
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+) -> jax.Array:
+    """Fused-conv oracle: materialized SWU + the mode's MVU reference.
+
+    x: (B, H, W, C) ints ({0,1} bits for binary/xnor weights' activations as
+    appropriate); w: (N, Kd^2*C) in (ky, kx, c) order.  This is the "HLS"
+    path -- it pays the im2col blow-up the Pallas kernel avoids.
+    """
+    from repro.core import swu as swu_mod
+
+    b = x.shape[0]
+    cols = swu_mod.sliding_window(x, kernel, stride, pad)  # (B, P, K)
+    a = cols.reshape(-1, cols.shape[-1])
+    if mode == "xnor":
+        acc = jax.lax.dot_general(
+            packing.bits_to_bipolar(a.astype(jnp.int32)),
+            packing.bits_to_bipolar(w.astype(jnp.int32)),
+            (((1,), (1,)), ((), ())), preferred_element_type=jnp.int32,
+        )
+        out = _epilogue(acc, thresholds, out_scale)
+    elif mode == "binary":
+        out = mvu_binary_ref(a, w, thresholds, out_scale)
+    else:
+        out = mvu_int_ref(a, w, thresholds, out_scale)
+    return out.reshape(b, cols.shape[1], -1)
+
+
 def mvu_int_ref(
     a: jax.Array,
     w: jax.Array,

@@ -1,0 +1,189 @@
+"""Fused SWU+MVU conv kernel (FINN Fig. 1 without the im2col matrix).
+
+In FINN the Sliding Window Unit lowers convolution to an interleaved GEMM
+*stream*: a line buffer holds the last ``Kd`` input rows and feeds the MVU
+one K = Kd^2*C window per output pixel, so the (P, K) im2col matrix never
+exists in memory.  ``repro.core.swu.sliding_window`` is the host-side analog
+that *does* materialize it -- exactly the (B, OH*OW, Kd^2*C) HBM blow-up the
+RTL avoids.
+
+This kernel family restores the line-buffer discipline on TPU: the input
+image stays in its natural (B, H, W, C) layout in HBM, and each grid step
+gathers the sliding windows for one tile of output rows *inside the kernel*
+(static strided slices over the ``Kd`` resident kernel rows -- the line
+buffer), multiplies against one PE block of the packed weight matrix, and
+runs the fused multi-threshold epilogue.  The (ky, kx, c) feature order
+matches :func:`repro.core.swu.pack_conv_weights`, so the same packed weights
+serve both paths.
+
+Grid = (B, row tiles, NF); every step is independent (full-K dot per step),
+mirroring one pass of the FINN SWU/MVU pair over ``rt`` output rows:
+
+    A tile   (rt*OW, K)  gathered from the Kd-row line buffer per output row
+    W block  (PE=bn, K)  weight stream, one NF row group per step
+    epilogue thresholds / scale / raw int32 accumulator (shared MVTU code)
+
+All three weight codings run through the MXU via the usual identities
+(cf. ``mvu_binary``/``ops.xnor_mxu``):
+
+    standard  acc = A . W^T                          (int8 x int8 -> int32)
+    binary    acc = 2*(A . W01^T) - sum_k A          ({0,1}-coded +/-1 rows)
+    xnor      acc = 4*(A01 . W01^T) - 2*sum_k A01
+                    - 2*sum_k W01 + K                (1-bit x 1-bit, bipolar)
+
+The xnor identity needs no pad-bit correction: the gather builds A with
+exactly K true synapses, unlike the packed-word datapath.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.swu import out_dim
+from repro.kernels._common import CompilerParams, epilogue_value, pad_to
+
+MODES = ("standard", "binary", "xnor")
+
+
+def _kernel(*refs, kernel: int, stride: int, ow: int, rt: int, k: int,
+            mode: str, has_thresh: bool, has_scale: bool):
+    if has_thresh:
+        x_ref, w_ref, t_ref, o_ref = refs
+        s_ref = None
+    elif has_scale:
+        x_ref, w_ref, s_ref, o_ref = refs
+        t_ref = None
+    else:
+        x_ref, w_ref, o_ref = refs
+        t_ref = s_ref = None
+
+    t = pl.program_id(1)
+
+    # Line-buffer gather: for each output row in the tile, only the Kd
+    # resident kernel rows are touched; each kx tap is a static strided
+    # slice, so no im2col matrix ever exists outside this kernel.
+    tiles = []
+    for r in range(rt):  # static unroll over the row tile
+        row0 = (t * rt + r) * stride
+        win = x_ref[0, pl.ds(row0, kernel)]  # (Kd, Wp, C) -- the line buffer
+        taps = [
+            win[:, kx : kx + stride * ow : stride, :]  # (Kd, OW, C) per kx
+            for kx in range(kernel)
+        ]
+        a = jnp.stack(taps, axis=1)  # (ky, kx, OW, C)
+        tiles.append(jnp.transpose(a, (2, 0, 1, 3)).reshape(ow, k))
+    a_tile = jnp.concatenate(tiles, axis=0).astype(jnp.int8)  # (rt*OW, K)
+
+    w_blk = w_ref[...]  # (bn, K) int8
+    dot = jax.lax.dot_general(
+        a_tile, w_blk, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.int32,
+    )
+    if mode == "standard":
+        acc = dot
+    elif mode == "binary":
+        rowsum = jnp.sum(a_tile.astype(jnp.int32), axis=1, keepdims=True)
+        acc = 2 * dot - rowsum
+    else:  # xnor: both operands {0,1}-coded +/-1
+        rowsum = jnp.sum(a_tile.astype(jnp.int32), axis=1, keepdims=True)
+        colsum = jnp.sum(w_blk.astype(jnp.int32), axis=1)[None, :]
+        acc = 4 * dot - 2 * rowsum - 2 * colsum + k
+
+    o_ref[...] = epilogue_value(acc, t_ref, s_ref)[None]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "kernel", "stride", "pad", "mode", "block_n", "rows_per_tile",
+        "block_m", "interpret",
+    ),
+)
+def conv_mvu_pallas(
+    x: jax.Array,
+    w: jax.Array,
+    thresholds: jax.Array | None = None,
+    out_scale: jax.Array | None = None,
+    *,
+    kernel: int,
+    stride: int = 1,
+    pad: int = 0,
+    mode: str = "standard",
+    block_n: int = 128,
+    block_m: int = 128,
+    rows_per_tile: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """out[B, OH*OW, N] = epilogue(SWU(x) . W^T), without materializing SWU(x).
+
+    x: (B, H, W, C) int8 activations (standard/binary) or {0,1} bits (xnor)
+    w: (N, K = Kd^2*C) int8 packed in (ky, kx, c) order; binary/xnor rows are
+       {0,1}-coded +/-1 (``packing.bipolar_to_bits``)
+    thresholds: optional (N, T) int32  -> int32 activations in [0, T]
+    out_scale: optional (N,) float32   -> float32 dequantized output
+    """
+    if mode not in MODES:
+        raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
+    if thresholds is not None and out_scale is not None:
+        raise ValueError("thresholds and out_scale are mutually exclusive")
+    b, h, wdim, c = x.shape
+    n, k = w.shape
+    assert k == kernel * kernel * c, (w.shape, kernel, c)
+    oh = out_dim(h, kernel, stride, pad)
+    ow = out_dim(wdim, kernel, stride, pad)
+
+    # Output-row tiling: rt rows per grid step so the MXU sees M ~ block_m
+    # pixels; OH pads up to a whole number of tiles (garbage rows sliced off).
+    rt = rows_per_tile or max(1, min(oh, -(-block_m // ow)))
+    n_tiles = -(-oh // rt)
+    need_h = (n_tiles * rt - 1) * stride + kernel
+    x_p = jnp.pad(
+        x.astype(jnp.int8),
+        ((0, 0), (pad, max(pad, need_h - h - pad)), (pad, pad), (0, 0)),
+    )
+    hp, wp = x_p.shape[1], x_p.shape[2]
+    w_p = pad_to(w.astype(jnp.int8), 0, block_n)
+    np_ = w_p.shape[0]
+    grid = (b, n_tiles, np_ // block_n)
+
+    in_specs = [
+        pl.BlockSpec((1, hp, wp, c), lambda bi, ti, ni: (bi, 0, 0, 0)),
+        pl.BlockSpec((block_n, k), lambda bi, ti, ni: (ni, 0)),
+    ]
+    operands = [x_p, w_p]
+    has_thresh = thresholds is not None
+    has_scale = out_scale is not None
+    if has_thresh:
+        t_p = pad_to(thresholds.astype(jnp.int32), 0, block_n)
+        nt = t_p.shape[1]
+        in_specs.append(pl.BlockSpec((block_n, nt), lambda bi, ti, ni: (ni, 0)))
+        operands.append(t_p)
+        out_dtype = jnp.int32
+    elif has_scale:
+        s_p = pad_to(out_scale.reshape(-1, 1).astype(jnp.float32), 0, block_n, value=1)
+        in_specs.append(pl.BlockSpec((block_n, 1), lambda bi, ti, ni: (ni, 0)))
+        operands.append(s_p)
+        out_dtype = jnp.float32
+    else:
+        out_dtype = jnp.int32
+
+    out = pl.pallas_call(
+        functools.partial(
+            _kernel, kernel=kernel, stride=stride, ow=ow, rt=rt, k=k,
+            mode=mode, has_thresh=has_thresh, has_scale=has_scale,
+        ),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, rt * ow, block_n), lambda bi, ti, ni: (bi, ti, ni)),
+        out_shape=jax.ShapeDtypeStruct((b, n_tiles * rt * ow, np_), out_dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+        name=f"conv_mvu_{mode}",
+    )(*operands)
+    return out[:, : oh * ow, :n]

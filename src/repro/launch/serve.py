@@ -92,14 +92,29 @@ class EngineServer:
         self.stats["requests"] += 1
         return rid
 
+    def submit_batch(self, xs: np.ndarray) -> list[int]:
+        """Queue a multi-sample request (leading batch dim); returns one rid
+        per sample.  Requests larger than the biggest bucket are legal: flush
+        splits the backlog across max-size bucket launches."""
+        return [self.submit(x) for x in np.asarray(xs)]
+
     def _bucket_for(self, n: int) -> int:
         for b in self.buckets:
             if n <= b:
                 return b
-        return self.buckets[-1]
+        # No bucket holds n samples.  Returning the max bucket here would
+        # silently launch an unbucketed (n-sized) jit shape; oversized groups
+        # must be split across max-size buckets by flush() instead.
+        raise ValueError(
+            f"group of {n} exceeds the largest bucket {self.buckets[-1]}; "
+            "flush() must split it first"
+        )
 
     def flush(self) -> list[EngineRequest]:
-        """Coalesce pending requests, run the engine, scatter the results."""
+        """Coalesce pending requests, run the engine, scatter the results.
+
+        Backlogs larger than the biggest bucket split into max-bucket chunks,
+        so the engine only ever sees bucket-sized batches."""
         done: list[EngineRequest] = []
         while self._pending:
             group = self._pending[: self.buckets[-1]]

@@ -96,7 +96,8 @@ def test_fused_engine_matches_interpreter_conv(mode):
     engine = FusedEngine(fin)
     got = np.asarray(engine(x))
     np.testing.assert_array_equal(got, want)
-    assert all(node.op in ("input", "swu", "mvu") for node in engine.graph)
+    # the swu+mvu pair collapses into the line-buffer conv kernel
+    assert [node.op for node in engine.graph] == ["input", "conv_mvu"]
 
 
 def test_microbatch_streaming_invariance():
@@ -152,6 +153,32 @@ def test_engine_server_coalesces_and_matches_direct():
     # 11 requests over (1,4,8) buckets: one 8-chunk + one 4-bucket pad
     assert server.stats["flushes"] == 2
     assert server.stats["padded_samples"] == 1
+
+
+def test_engine_server_splits_oversized_submissions():
+    """Regression: a backlog larger than the biggest bucket must split across
+    max-size bucket launches (not land in a non-existent bigger bucket)."""
+    from repro.launch.serve import EngineServer
+
+    bits = 2
+    rng = np.random.default_rng(17)
+    fin = _finalized(_mlp_graph(rng, [24, 16, 8], bits), "standard", bits)
+    engine = FusedEngine(fin)
+    server = EngineServer(engine, batch_buckets=(1, 4, 8))
+
+    with pytest.raises(ValueError):
+        server._bucket_for(9)  # no bucket holds 9 samples
+
+    xs = rng.integers(0, 2**bits, (19, 24)).astype(np.int32)
+    rids = server.submit_batch(xs)
+    done = {r.rid: r for r in server.flush()}
+    assert sorted(done) == rids and not server._pending
+    # 19 = 8 + 8 + 3: two max-size launches, the tail padded up to 4
+    assert server.stats["flushes"] == 3
+    assert server.stats["padded_samples"] == 1
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(done[rid].out, want[i])
 
 
 def test_engine_pipeline_multidevice_matches_single():
