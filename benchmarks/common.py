@@ -16,6 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the paired interleaved A/B estimator is canonical in repro.core.autotune
+# (the tuner must measure candidates the same way the CI gate re-measures
+# the winners); re-exported here for the benchmark suite
+from repro.core.autotune import paired_times as paired_times
 from repro.kernels import ops, packing, ref
 
 
@@ -33,28 +37,6 @@ def time_call(fn, *args, reps: int = 3, warmup: int = 1) -> float:
     return float(np.median(ts))
 
 
-def paired_times(fn_a, fn_b, *args, reps: int = 3, warmup: int = 1):
-    """Interleaved A/B timing for speedup gates: ``(t_a, t_b, speedup)``.
-
-    Each rep times both callables back-to-back, so environmental slowdowns
-    (noisy CI neighbors, frequency scaling) hit both sides of the ratio;
-    the reported speedup is the median of per-rep ratios, and the times are
-    the per-side minima (the stable one-sided-noise estimator)."""
-    for _ in range(warmup):
-        jax.block_until_ready(fn_a(*args))
-        jax.block_until_ready(fn_b(*args))
-    tas, tbs, ratios = [], [], []
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn_a(*args))
-        ta = time.perf_counter() - t0
-        t1 = time.perf_counter()
-        jax.block_until_ready(fn_b(*args))
-        tb = time.perf_counter() - t1
-        tas.append(ta)
-        tbs.append(tb)
-        ratios.append(ta / tb)
-    return float(np.min(tas)), float(np.min(tbs)), float(np.median(ratios))
 
 
 def compile_probe(fn, *arg_shapes) -> dict:

@@ -60,8 +60,10 @@ def conv_memory_model(engine: FusedEngine, batch: int, microbatch: int) -> dict:
         pad = node.attrs["pad"]
         k = kd * kd * c
         im2col = max(im2col, batch * oh * ow * k * 4)
+        from repro.kernels.swu_mvu import conv_rows_per_tile
+
         cfg = node.attrs["config"]
-        rt = max(1, min(oh, -(-cfg.block_m // ow)))
+        rt = conv_rows_per_tile(oh, ow, cfg.block_m)
         resident = (h + 2 * pad) * (w + 2 * pad) * c + rt * ow * k
         fused = max(fused, microbatch * resident)
     return {

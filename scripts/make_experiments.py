@@ -297,6 +297,59 @@ def main():
       "timings in bench_output.txt are correctness-path numbers, not TPU "
       "projections.\n")
 
+    # ----------------------------------------------------------- autotuning
+    w("\n## Autotuning — heuristic folding vs empirical schedule search\n")
+    w("`repro.core.autotune` replaces the one-shot `choose_folding` + "
+      "`to_tpu_blocks` heuristic with a measured design-space search: "
+      "candidates from the layer's folding divisors (+ the pallas-vs-xla "
+      "backend and the engine microbatch tile), VMEM-pruned and "
+      "cycle-ordered by the analytic resource model, timed with the paired "
+      "interleaved timer, winners committed to the per-config "
+      "`TUNED_SCHEDULES` caches. `FusedEngine(tune=\"cache\")` consumes "
+      "them with zero measurement at load time; "
+      "`python -m benchmarks.autotune_gain` re-proves the end-to-end gain "
+      "(CI-gated at the committed record's 1.15x floor).\n")
+    gain_path = "experiments/bench/autotune_gain.json"
+    if os.path.exists(gain_path):
+        with open(gain_path) as fh:
+            gain = json.load(fh)
+        w(f"End-to-end on `{gain['config']}` (batch {gain['batch']}): tuned "
+          f"engine **{gain['speedup']:.2f}x** over the heuristic-default "
+          f"engine, bit-exact={gain['bit_exact']}, "
+          f"{gain['tuned_nodes']}/{gain['total_nodes']} nodes tuned, "
+          f"microbatch tile {gain['microbatch_tile']}. "
+          f"({gain.get('speedup_note', '')})\n")
+    try:
+        from repro.configs import cnv_bnn, nid_mlp
+
+        for title, mod in (("NID-MLP", nid_mlp), ("CNV (quick, xnor)", cnv_bnn)):
+            sched = getattr(mod, "TUNED_SCHEDULES", {})
+            node_rows = [(k, v) for k, v in sched.items()
+                         if not k.startswith("engine|")]
+            if not node_rows:
+                continue
+            w(f"\n### {title}: per-layer heuristic vs tuned schedule\n")
+            w("| cache key (device\\|op\\|mode\\|N\\|K\\|epilogue\\|px) | "
+              "tuned blocks (m, n, k-step/rows) | backend | node speedup |")
+            w("|---|---|---|---|")
+            for key, v in node_rows:
+                if "|conv" in key:
+                    kk = f"rt={v.get('rows_per_tile', 'auto')}"
+                elif "xnor" in key:
+                    kk = v["block_kw"]
+                else:
+                    kk = v["block_k"]
+                w(f"| `{key}` | ({v['block_m']}, {v['block_n']}, {kk}) "
+                  f"| {v['backend']} | {v['speedup']:.2f}x |")
+            eng = [(k, v) for k, v in sched.items() if k.startswith("engine|")]
+            for key, v in eng:
+                w(f"\nEngine-level: microbatch tile {v['microbatch']} "
+                  f"(tuned at batch {v['batch']}, {v['speedup']:.2f}x over "
+                  f"the heuristic plan).")
+            w("")
+    except ImportError:
+        pass
+
     # ----------------------------------------------------------- large table
     if large:
         w("\n## Appendix: Table 3/4 large-design convergence\n")

@@ -49,6 +49,50 @@ QUICK = CNVSpec(
 )
 
 
+# Committed autotune results (repro.core.autotune) for the QUICK CNV in
+# xnor mode on the CPU interpret-mode host (device key "cpu"): winners of
+# the empirical tile-schedule search, consumed by
+# ``FusedEngine(tune="cache")`` with zero measurement at load time.  The
+# conv entries were measured in the engine's streaming regime (single-image
+# microbatches).  Regenerate with
+# ``python -m benchmarks.autotune_gain --config cnv --retune``.
+TUNED_SCHEDULES = {
+    "cpu|conv3s1p0@16x16x3|xnor|n8|k27|thresh|px196": {
+        "backend": "pallas", "block_m": 32, "block_n": 8,
+        "rows_per_tile": 3, "epilogue": "thresh", "n_pixels": 196,
+        "predicted_cycles": 196, "speedup": 1.30,
+    },
+    "cpu|conv3s1p0@14x14x8|xnor|n8|k72|thresh|px144": {
+        "backend": "pallas", "block_m": 256, "block_n": 8,
+        "rows_per_tile": 12, "epilogue": "thresh", "n_pixels": 144,
+        "predicted_cycles": 144, "speedup": 1.32,
+    },
+    "cpu|conv3s1p0@6x6x8|xnor|n16|k72|thresh|px16": {
+        "backend": "pallas", "block_m": 32, "block_n": 128,
+        "rows_per_tile": 4, "epilogue": "thresh", "n_pixels": 16,
+        "predicted_cycles": 16, "speedup": 1.51,
+    },
+    "cpu|conv3s1p0@4x4x16|xnor|n16|k144|thresh|px4": {
+        "backend": "pallas", "block_m": 128, "block_n": 16,
+        "epilogue": "thresh", "n_pixels": 4,
+        "predicted_cycles": 8, "speedup": 1.0,
+    },
+    "cpu|mvu|xnor|n64|k64|thresh|px1": {
+        "backend": "pallas", "block_m": 32, "block_n": 64, "block_k": 128,
+        "block_kw": 2, "epilogue": "thresh", "n_pixels": 1,
+        "predicted_cycles": 1, "speedup": 1.42,
+    },
+    "cpu|mvu|xnor|n10|k64|scale|px1": {
+        "backend": "pallas", "block_m": 256, "block_n": 128, "block_k": 128,
+        "block_kw": 2, "epilogue": "scale", "n_pixels": 1,
+        "predicted_cycles": 1, "speedup": 1.13,
+    },
+    "engine|cpu|8ea0ac6c37bc": {
+        "microbatch": 1, "batch": 128, "speedup": 1.0,
+    },
+}
+
+
 def _bn(rng, name: str, n: int) -> Node:
     return Node("batchnorm", name, {}, {
         "gamma": jnp.asarray(rng.uniform(-1.5, 1.5, n).astype(np.float32)),

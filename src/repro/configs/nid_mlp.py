@@ -20,3 +20,31 @@ INPUT_BITS = 2
 
 def foldings() -> list[Folding]:
     return [Folding(pe, simd) for (_, _, pe, simd) in LAYERS]
+
+
+# Committed autotune results (repro.core.autotune): winners of the empirical
+# design-space search over Pallas tile schedules on the CPU interpret-mode
+# host (device key "cpu"), consumed by ``FusedEngine(tune="cache")`` with
+# zero measurement at load time.  The engine-level entry pins the tuned
+# microbatch tile for the NID stage chain.  Regenerate with
+# ``python -m benchmarks.autotune_gain --config nid_mlp --retune``.
+TUNED_SCHEDULES = {
+    "cpu|mvu|standard|n64|k600|thresh|px1": {
+        "backend": "pallas", "block_m": 256, "block_n": 64, "block_k": 300,
+        "block_kw": 8, "epilogue": "thresh", "n_pixels": 1,
+        "predicted_cycles": 2, "speedup": 1.64,
+    },
+    "cpu|mvu|standard|n64|k64|thresh|px1": {
+        "backend": "pallas", "block_m": 256, "block_n": 64, "block_k": 64,
+        "block_kw": 8, "epilogue": "thresh", "n_pixels": 1,
+        "predicted_cycles": 1, "speedup": 2.16,
+    },
+    "cpu|mvu|standard|n1|k64|scale|px1": {
+        "backend": "pallas", "block_m": 256, "block_n": 8, "block_k": 64,
+        "block_kw": 8, "epilogue": "scale", "n_pixels": 1,
+        "predicted_cycles": 1, "speedup": 1.88,
+    },
+    "engine|cpu|b155d7a42584": {
+        "microbatch": 256, "batch": 1024, "speedup": 1.0,
+    },
+}

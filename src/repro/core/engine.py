@@ -77,13 +77,35 @@ class FusedEngine:
       bit-exact with ``dataflow.execute`` on the unfused graph.
     """
 
+    TUNE_MODES = ("off", "cache", "auto")
+
     def __init__(self, graph: Graph, *, fuse: bool = True,
-                 microbatches: int | None = None):
+                 microbatches: int | None = None,
+                 tune: str = "off", cache=None,
+                 tune_kwargs: dict | None = None):
+        if tune not in self.TUNE_MODES:
+            raise ValueError(f"tune must be one of {self.TUNE_MODES}, got {tune!r}")
         g: Graph = lowering.fuse_epilogues(graph) if fuse else list(graph)
         # swu+mvu pairs collapse into the line-buffer conv kernel, so the
         # im2col matrix never materializes between stages (FINN's SWU->MVU
         # AXI stream; the conv analog of epilogue fusion).
         self.graph = lowering.fuse_swu(g) if fuse else g
+        self._tile: int | None = None
+        if tune != "off":
+            # tune="cache" is a pure lookup over committed results -- no
+            # timer ever runs at construction; tune="auto" measures cache
+            # misses once and records them (see repro.core.autotune).
+            from repro.core import autotune
+
+            cache = cache if cache is not None else autotune.default_cache()
+            self.graph = autotune.tune_graph(self.graph, cache=cache,
+                                             mode=tune, **(tune_kwargs or {}))
+            # the engine-level entry lives in the same device namespace as
+            # the node entries, so a device override must scope both lookups
+            device = (tune_kwargs or {}).get("device")
+            ent = cache.get(autotune.engine_key(self.graph, device=device))
+            if ent is not None:
+                self._tile = max(1, int(ent["microbatch"]))
         self.schedule = dataflow.schedule(self.graph)
         runners = [dataflow.node_runner(n) for n in self.graph]
         self._fns = tuple(fn for _, fn in runners)
@@ -113,8 +135,10 @@ class FusedEngine:
         # Samples per burst: a dense stage's kernel holds block_m samples per
         # M tile; a conv stage's M tile holds block_m *pixels*, i.e.
         # block_m // n_pixels whole images -- the conv bottleneck sets the
-        # microbatch for the whole chain.
-        tile = min(max(1, st.block_m // st.n_pixels) for st in s.stages)
+        # microbatch for the whole chain.  An engine-level autotune entry
+        # (``autotune.tune_engine``) overrides the heuristic tile.
+        tile = self._tile or min(max(1, st.block_m // st.n_pixels)
+                                 for st in s.stages)
         n_micro = max(1, min(math.ceil(batch / tile), batch))
         if self._microbatches is not None:
             n_micro = max(1, min(self._microbatches, batch))

@@ -134,3 +134,47 @@ def to_tpu_blocks(fold: Folding, mode: str, m: int = 128) -> dict[str, int]:
         bkw = max(1, fold.simd // WORD_BITS)
         return {"block_m": m, "block_n": max(8, fold.pe), "block_kw": bkw}
     return {"block_m": m, "block_n": max(8, fold.pe), "block_k": max(8, fold.simd)}
+
+
+def block_candidates(
+    n: int,
+    k: int,
+    mode: str,
+    *,
+    block_ms: Sequence[int] = (32, 128, 256),
+    max_block: int = 512,
+) -> list[dict[str, int]]:
+    """Enumerate the legal Pallas tile schedules for an (N, K) layer.
+
+    The candidate axes come from the layer's folding divisors, clamped to
+    the TPU minima exactly like :func:`to_tpu_blocks` (block_n/block_k >= 8),
+    plus the full-MXU defaults -- so the heuristic schedule is always in the
+    set and the autotuner can only match or beat it.  ``block_kw`` (xnor)
+    ranges over divisors of the packed word count.  Candidates are unique
+    dicts; ordering/pruning is the caller's job (``repro.core.autotune``).
+    """
+    bns = sorted({max(8, d) for d in divisors(n)} | {128})
+    bns = [b for b in bns if b <= max(max_block, 8)]
+    out: list[dict[str, int]] = []
+    if mode == "xnor":
+        n_words = -(-k // WORD_BITS)
+        bkws = sorted({d for d in divisors(n_words)} | {min(8, n_words)})
+        for bm in block_ms:
+            for bn in bns:
+                for bkw in bkws:
+                    out.append({"block_m": bm, "block_n": bn, "block_kw": bkw})
+    else:
+        bks = sorted({max(8, d) for d in divisors(k)} | {128, min(512, max(8, k))})
+        bks = [b for b in bks if b <= max(max_block, 8)]
+        for bm in block_ms:
+            for bn in bns:
+                for bk in bks:
+                    out.append({"block_m": bm, "block_n": bn, "block_k": bk})
+    seen: set[tuple] = set()
+    uniq = []
+    for c in out:
+        key = tuple(sorted(c.items()))
+        if key not in seen:
+            seen.add(key)
+            uniq.append(c)
+    return uniq

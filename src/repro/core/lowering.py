@@ -5,6 +5,8 @@
     fuse_epilogues: same fold for finalized graphs (the runtime engine path)
     fuse_swu:       [swu, mvu] -> conv_mvu (line-buffer fused conv kernel)
     apply_folding:  attach rate-balanced Folding to every mvu/conv_mvu node
+    apply_schedules: pin empirically tuned kernel schedules from the
+                     autotune cache onto every mvu/conv_mvu node
 """
 
 from __future__ import annotations
@@ -275,3 +277,18 @@ def apply_folding(graph: Graph, *, target_cycles: int | None = None,
         cfg = graph[i].attrs["config"]
         graph[i].attrs["config"] = MVUConfig(**{**cfg.__dict__, "folding": f})
     return graph
+
+
+def apply_schedules(graph: Graph, *, cache=None, mode: str = "cache",
+                    device: str | None = None) -> Graph:
+    """Empirical-schedule pass: the autotuned counterpart of ``apply_folding``.
+
+    Rewrites every finalized mvu/conv_mvu node's config with the schedule
+    recorded in the autotune cache (``repro.core.autotune``): explicit
+    kernel blocks plus the winning backend.  ``mode="cache"`` only consumes
+    committed results (zero measurement); ``mode="auto"`` measures misses
+    and fills the cache.  Returns a new graph; the input is untouched.
+    """
+    from repro.core import autotune
+
+    return autotune.tune_graph(graph, cache=cache, mode=mode, device=device)

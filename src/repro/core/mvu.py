@@ -28,6 +28,43 @@ from repro.kernels import ops, packing
 
 
 @dataclasses.dataclass(frozen=True)
+class KernelBlocks:
+    """An explicit Pallas tile schedule for one MVU instance.
+
+    ``to_tpu_blocks`` derives one of these from a (PE, SIMD) folding; the
+    autotuner (``repro.core.autotune``) instead searches the legal schedule
+    space and pins the winner here.  Hashable so tuned configs stay usable
+    as set/dict members like untuned ones.
+    """
+
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    block_kw: int = 8  # packed-word K step (xnor datapath only)
+    rows_per_tile: int | None = None  # conv line-buffer rows per grid step
+
+    def as_kwargs(self, mode: str) -> dict[str, int]:
+        """The kwargs the kernel entry points take (uniform plumbing: the
+        dense path ignores ``rows_per_tile``, the conv path ignores the K
+        blocks -- both accept the full set)."""
+        if mode == "xnor":
+            out = {"block_m": self.block_m, "block_n": self.block_n,
+                   "block_kw": self.block_kw}
+        else:
+            out = {"block_m": self.block_m, "block_n": self.block_n,
+                   "block_k": self.block_k}
+        if self.rows_per_tile is not None:
+            out["rows_per_tile"] = self.rows_per_tile
+        return out
+
+    @classmethod
+    def from_blocks(cls, blocks: dict) -> "KernelBlocks":
+        known = {f.name for f in dataclasses.fields(cls)}
+        return cls(**{k: int(v) for k, v in blocks.items()
+                      if k in known and v is not None})
+
+
+@dataclasses.dataclass(frozen=True)
 class MVUConfig:
     in_features: int  # K = Kd^2 * I_c
     out_features: int  # N = O_c
@@ -37,13 +74,20 @@ class MVUConfig:
     folding: Folding | None = None  # None = fully parallel tile defaults
     backend: str = "pallas"
     block_m: int = 128
+    blocks: KernelBlocks | None = None  # explicit (tuned) schedule wins
 
     def resolved_folding(self) -> Folding:
         if self.folding is not None:
+            # An explicit folding is a schedule claim: PE | N and SIMD | K
+            # (FINN's legality condition).  Reject illegal choices here, at
+            # config time, instead of letting them silently mis-tile.
+            self.folding.validate(self.out_features, self.in_features)
             return self.folding
         return choose_folding(self.out_features, self.in_features)
 
     def kernel_blocks(self) -> dict[str, int]:
+        if self.blocks is not None:
+            return self.blocks.as_kwargs(self.mode)
         return to_tpu_blocks(self.resolved_folding(), self.mode, self.block_m)
 
 
@@ -130,6 +174,7 @@ class MVULayer:
             n_pixels=n_pixels,
             block_m=cfg.block_m,
             n_thresh=t,
+            blocks=cfg.kernel_blocks(),  # tuned schedules model what they run
         )
 
 

@@ -22,7 +22,12 @@ from __future__ import annotations
 
 import dataclasses
 
-from repro.core.folding import Folding, input_buffer_depth, weight_mem_depth
+from repro.core.folding import (
+    Folding,
+    input_buffer_depth,
+    to_tpu_blocks,
+    weight_mem_depth,
+)
 from repro.kernels.packing import WORD_BITS
 
 # TPU v5e hardware constants (roofline terms use the same numbers).
@@ -66,21 +71,40 @@ def mvu_resources(
     n_pixels: int = 1,
     block_m: int = 128,
     n_thresh: int = 0,
+    blocks: dict | None = None,
 ) -> MVUResources:
-    """Closed-form resource estimate for one MVU layer instance."""
+    """Closed-form resource estimate for one MVU layer instance.
+
+    The VMEM working set (``lut_bytes``) is computed from the *actual*
+    kernel blocks, not the raw folding: ``to_tpu_blocks`` clamps ``block_n``
+    and ``block_k`` up to TPU-friendly minima (8 sublanes), and the kernel
+    pads K up to a whole number of ``block_k`` steps while keeping the A
+    tile full-K resident in int8.  Pass ``blocks`` to estimate an explicit
+    (e.g. autotuned) schedule; otherwise the folding's derived blocks are
+    used.  BRAM/cycle terms stay on the folding abstraction (paper Eq. 1/2).
+    """
     wb = weight_bits / 8.0
     ab = _act_bytes(mode, act_bits)
+    if blocks is None:
+        blocks = to_tpu_blocks(fold, mode, block_m)
+    block_m = blocks.get("block_m", block_m)
+    bn = blocks["block_n"]
 
     if mode == "xnor":
-        simd_words = max(1, fold.simd // WORD_BITS)
-        a_tile = block_m * (-(-k // WORD_BITS)) * 4  # packed input buffer (full K)
-        w_tile = fold.pe * simd_words * 4
+        # packed-word datapath: operands live as uint32 words in VMEM
+        bkw = blocks.get("block_kw", max(1, fold.simd // WORD_BITS))
+        kw = -(-k // WORD_BITS)
+        a_tile = block_m * (-(-kw // bkw) * bkw) * 4  # packed input, full K
+        w_tile = bn * bkw * 4
     else:
-        a_tile = block_m * k * ab  # input buffer: full-K resident
-        w_tile = fold.pe * fold.simd * wb
-    acc = block_m * fold.pe * 4  # int32 PE accumulators
-    thr = fold.pe * n_thresh * 4
-    out_tile = block_m * fold.pe * 4
+        # int8 operands on the MXU path regardless of logical weight_bits;
+        # A is full-K resident, padded up to whole block_k steps
+        bk = blocks.get("block_k", max(8, fold.simd))
+        a_tile = block_m * (-(-k // bk) * bk) * 1
+        w_tile = bn * bk * 1
+    acc = block_m * bn * 4  # int32 PE accumulators
+    thr = bn * n_thresh * 4
+    out_tile = block_m * bn * 4
 
     lut = int(a_tile + w_tile + acc + out_tile + thr)
     ff = int(acc + 64)  # accumulators + FSM/counter state

@@ -89,6 +89,7 @@ def conv_mvu(
     block_n: int = 128,
     block_k: int = 128,
     block_kw: int = 8,
+    rows_per_tile: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Fused SWU+MVU convolution: epilogue(SWU(x) . W^T) -> (B, OH*OW, N).
@@ -120,7 +121,8 @@ def conv_mvu(
     return conv_mvu_pallas(
         x, w, thresholds, out_scale,
         kernel=kernel, stride=stride, pad=pad, mode=mode,
-        block_m=block_m, block_n=block_n, interpret=interpret,
+        block_m=block_m, block_n=block_n, rows_per_tile=rows_per_tile,
+        interpret=interpret,
     )
 
 
@@ -137,13 +139,20 @@ def mvu(
     block_n: int = 128,
     block_k: int = 128,
     block_kw: int = 8,
+    rows_per_tile: int | None = None,
     interpret: bool | None = None,
 ) -> jax.Array:
     """Matrix-vector(-batch) compute: epilogue(A . W^T).
 
     Shapes: standard/binary: a (M, K), w (N, K). xnor: packed a (M, Wd)
     uint32, w (N, Wd) uint32 with ``k_bits`` true synapses.
+
+    ``rows_per_tile`` is accepted for uniform block plumbing with
+    :func:`conv_mvu` (tuned schedules pass one kwargs set to either entry
+    point); the dense kernels have no row tiling and ignore it, just as the
+    conv path ignores ``block_k``/``block_kw``.
     """
+    del rows_per_tile
     if mode not in MODES:
         raise ValueError(f"mode must be one of {MODES}, got {mode!r}")
     if backend not in BACKENDS:

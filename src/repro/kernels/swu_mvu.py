@@ -49,6 +49,39 @@ from repro.kernels._common import CompilerParams, epilogue_value, pad_to
 MODES = ("standard", "binary", "xnor")
 
 
+def conv_rows_per_tile(oh: int, ow: int, block_m: int) -> int:
+    """Output rows gathered per grid step: the MXU sees ~block_m pixels."""
+    return max(1, min(oh, -(-block_m // ow)))
+
+
+def conv_vmem_bytes(
+    h: int, w: int, c: int, n: int, k: int,
+    *,
+    kernel: int, stride: int, pad: int,
+    block_m: int, block_n: int, n_thresh: int = 0,
+) -> int:
+    """VMEM working set of one ``conv_mvu_pallas`` grid step, in bytes.
+
+    Mirrors the kernel's actual residency: the whole padded image tile
+    (line-buffer source), the gathered (rt*OW, K) window tile, one PE block
+    of the weight matrix, the int32 output tile, and the threshold table.
+    The autotuner prunes candidate schedules against this before timing.
+    """
+    oh = out_dim(h, kernel, stride, pad)
+    ow = out_dim(w, kernel, stride, pad)
+    rt = conv_rows_per_tile(oh, ow, block_m)
+    n_tiles = -(-oh // rt)
+    need_h = (n_tiles * rt - 1) * stride + kernel
+    hp = h + pad + max(pad, need_h - h - pad)  # same padding rule as the kernel
+    wp = w + 2 * pad
+    image = hp * wp * c  # int8 line-buffer source, resident per grid step
+    a_tile = rt * ow * k  # int8 gathered windows
+    w_tile = block_n * k  # int8 PE block, full K
+    out_tile = rt * ow * block_n * 4
+    thr = block_n * n_thresh * 4
+    return int(image + a_tile + w_tile + out_tile + thr)
+
+
 def _kernel(*refs, kernel: int, stride: int, ow: int, rt: int, k: int,
             mode: str, has_thresh: bool, has_scale: bool):
     if has_thresh:
@@ -138,7 +171,7 @@ def conv_mvu_pallas(
 
     # Output-row tiling: rt rows per grid step so the MXU sees M ~ block_m
     # pixels; OH pads up to a whole number of tiles (garbage rows sliced off).
-    rt = rows_per_tile or max(1, min(oh, -(-block_m // ow)))
+    rt = rows_per_tile or conv_rows_per_tile(oh, ow, block_m)
     n_tiles = -(-oh // rt)
     need_h = (n_tiles * rt - 1) * stride + kernel
     x_p = jnp.pad(

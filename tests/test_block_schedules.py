@@ -1,0 +1,74 @@
+"""Property test: ANY legal block schedule is bit-exact with the oracle.
+
+The autotuner's contract is that tile schedules are pure performance knobs:
+whatever (block_m, block_n, block_k / block_kw) the search picks -- and
+whatever the tuner of the future picks -- the kernel output must equal
+``kernels/ref.py`` exactly, across all three weight codings, both epilogue
+forms, and shapes that divide none of the tile dims.  Hypothesis sweeps
+the schedule space the same way ``folding.block_candidates`` enumerates it
+(nightly CI installs hypothesis; the tier-1 run skips)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core.folding import divisors
+from repro.kernels import ops, packing, ref
+
+
+@st.composite
+def _schedule_case(draw):
+    mode = draw(st.sampled_from(["xnor", "binary", "standard"]))
+    m = draw(st.integers(1, 24))
+    n = draw(st.integers(1, 48))
+    k = draw(st.integers(1, 96))
+    # blocks drawn the way the tuner enumerates them: layer divisors clamped
+    # to the TPU minima, plus off-divisor sizes that force padding
+    bm = draw(st.sampled_from([8, 32, 128]))
+    bn = draw(st.sampled_from(sorted({max(8, d) for d in divisors(n)} | {128})))
+    if mode == "xnor":
+        n_words = -(-k // packing.WORD_BITS)
+        bk = draw(st.sampled_from(sorted(set(divisors(n_words)) | {8})))
+    else:
+        bk = draw(st.sampled_from(
+            sorted({max(8, d) for d in divisors(k)} | {128})))
+    epilogue = draw(st.sampled_from(["raw", "thresh"]))
+    n_thresh = draw(st.integers(1, 7)) if epilogue == "thresh" else 0
+    seed = draw(st.integers(0, 2**16))
+    return mode, m, n, k, bm, bn, bk, n_thresh, seed
+
+
+@settings(max_examples=30, deadline=None)
+@given(_schedule_case())
+def test_any_legal_schedule_is_bit_exact(case):
+    mode, m, n, k, bm, bn, bk, n_thresh, seed = case
+    rng = np.random.default_rng(seed)
+    t = None
+    if n_thresh:
+        t = jnp.asarray(np.sort(
+            rng.integers(-200, 200, (n, n_thresh)).astype(np.int32), axis=1))
+
+    if mode == "xnor":
+        ab = rng.integers(0, 2, (m, k)).astype(np.int32)
+        wb = rng.integers(0, 2, (n, k)).astype(np.int32)
+        a = packing.pack_bits(jnp.asarray(ab))
+        w = packing.pack_bits(jnp.asarray(wb))
+        want = ref.mvu_xnor_ref(a, w, k, t)
+        got = ops.mvu(a, w, "xnor", k_bits=k, thresholds=t,
+                      block_m=bm, block_n=bn, block_kw=bk)
+    elif mode == "binary":
+        a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(0, 2, (n, k)), jnp.int8)
+        want = ref.mvu_binary_ref(a, w, t)
+        got = ops.mvu(a, w, "binary", thresholds=t,
+                      block_m=bm, block_n=bn, block_k=bk)
+    else:
+        a = jnp.asarray(rng.integers(-8, 8, (m, k)), jnp.int8)
+        w = jnp.asarray(rng.integers(-8, 8, (n, k)), jnp.int8)
+        want = ref.mvu_int_ref(a, w, t)
+        got = ops.mvu(a, w, "standard", thresholds=t,
+                      block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))

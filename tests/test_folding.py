@@ -65,3 +65,13 @@ def test_to_tpu_blocks_xnor_words():
     assert blocks["block_kw"] == 2  # 64 synapses = 2 packed words
     blocks = f.to_tpu_blocks(f.Folding(64, 64), "standard")
     assert blocks["block_k"] == 64 and blocks["block_n"] == 64
+
+
+def test_block_candidates_contains_heuristic_and_clamps():
+    n, k = 24, 96
+    cands = f.block_candidates(n, k, "standard")
+    heur = f.to_tpu_blocks(f.choose_folding(n, k), "standard")
+    assert heur in cands
+    assert all(c["block_n"] >= 8 and c["block_k"] >= 8 for c in cands)
+    xc = f.block_candidates(24, 96, "xnor")
+    assert all("block_kw" in c and c["block_kw"] >= 1 for c in xc)
