@@ -19,6 +19,14 @@ overriding the CLI default: different benchmarks make different claims
 (fused-vs-interpreter engines commit to 2x; the autotuner's tuned-vs-
 heuristic gain commits to 1.15x).
 
+Lower-is-better metrics (latency): a baseline record may list keys under
+``lower_is_better`` (e.g. the serving benchmark's ``p99_vs_server`` tail-
+latency ratio).  For each such key the fresh value must stay within
+``--max-regression`` *above* the baseline, and the committed baseline
+itself must sit at or under its own ``max_<key>`` ceiling when one is
+present (the serving claim: p99 strictly better than the legacy server,
+``max_p99_vs_server: 1.0``) -- the exact mirror of the speedup rules.
+
 Absolute samples/s numbers from both runs are printed for the log but not
 gated.  Exits non-zero on the first failure so CI fails the build.
 """
@@ -54,6 +62,26 @@ def check_record(name: str, base: dict, fresh: dict, *,
                 f"{name}: speedup {f_speed:.2f}x regressed >"
                 f"{max_regression:.0%} vs baseline {b_speed:.2f}x "
                 f"(floor {floor:.2f}x)")
+    for key in base.get("lower_is_better", ()):
+        # latency-style metric: smaller is better, so the band and the
+        # absolute claim flip sign relative to the speedup rules above
+        b_val, f_val = base.get(key), fresh.get(key)
+        if b_val is None or f_val is None:
+            errors.append(
+                f"{name}: lower-is-better metric {key!r} missing from the "
+                f"{'baseline' if b_val is None else 'fresh'} record")
+            continue
+        ceil_abs = base.get(f"max_{key}")
+        if ceil_abs is not None and b_val > ceil_abs:
+            errors.append(
+                f"{name}: committed baseline {key} {b_val:.3f} exceeds its "
+                f"{ceil_abs:.3f} ceiling -- refresh the baseline")
+        ceiling = b_val * (1.0 + max_regression)
+        if f_val > ceiling:
+            errors.append(
+                f"{name}: {key} {f_val:.3f} regressed >"
+                f"{max_regression:.0%} vs baseline {b_val:.3f} "
+                f"(ceiling {ceiling:.3f})")
     for key in ("fused_samples_per_s", "unfused_samples_per_s"):
         if key in base or key in fresh:
             print(f"  {name}.{key}: baseline={base.get(key, float('nan')):.0f} "

@@ -350,6 +350,45 @@ def main():
     except ImportError:
         pass
 
+    # ----------------------------------------------------------- serving load
+    w("\n## Serving load — continuous batching vs submit/flush\n")
+    w("`repro.serving` fronts the fused engine with a bounded admission "
+      "queue, a continuous batcher (flush on bucket-fill / pipeline-idle / "
+      "deadline-slack, the budget derived from "
+      "`DataflowSchedule.steady_state_interval` via "
+      "`dataflow.interval_seconds` with the measured cycle time), and a "
+      "multi-replica pool (params `device_put` per device, least-loaded "
+      "async dispatch).  `python -m benchmarks.serving_load` drives it and "
+      "the legacy cadence-flushed `EngineServer` with the same open-loop "
+      "Poisson arrivals; the committed record is CI-gated on >=1.0x "
+      "throughput (`min_speedup`) AND strictly-better p99 "
+      "(`lower_is_better: p99_vs_server`, ceiling 1.0).\n")
+    serve_path = "experiments/bench/serving_load.json"
+    if os.path.exists(serve_path):
+        with open(serve_path) as fh:
+            sv = json.load(fh)
+        w(f"Open-loop Poisson on `{sv['config']}` ({sv['requests']} requests "
+          f"at {sv['rate_hz']:.0f}/s, SLO {sv['slo_ms']:.0f} ms, buckets "
+          f"{sv['buckets']}):\n")
+        w("| metric | continuous (`repro.serving`) | legacy `EngineServer` |")
+        w("|---|---|---|")
+        w(f"| p50 latency | {sv['serving_p50_ms']:.2f} ms "
+          f"| {sv['server_p50_ms']:.2f} ms |")
+        w(f"| p99 latency | {sv['serving_p99_ms']:.2f} ms "
+          f"| {sv['server_p99_ms']:.2f} ms |")
+        w(f"| deadline miss rate | {sv['serving_deadline_miss_rate']:.1%} "
+          f"| {sv['server_deadline_miss_rate']:.1%} |")
+        w(f"| open-loop completion | {sv['serving_samples_per_s']:.0f} "
+          f"samples/s | {sv['server_samples_per_s']:.0f} samples/s |")
+        w(f"| closed-loop saturation | "
+          f"{sv['closed_loop_serving_samples_per_s']:.0f} samples/s | "
+          f"{sv['closed_loop_server_samples_per_s']:.0f} samples/s |")
+        note = sv.get("claim_note")
+        w(f"\nCommitted claim: **{sv['speedup']:.2f}x** open-loop throughput, "
+          f"p99 at **{sv['p99_vs_server']:.2f}x** the legacy server's, "
+          f"bit_exact={sv['bit_exact']}."
+          + (f" ({note})\n" if note else "\n"))
+
     # ----------------------------------------------------------- large table
     if large:
         w("\n## Appendix: Table 3/4 large-design convergence\n")

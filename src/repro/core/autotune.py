@@ -104,6 +104,17 @@ def node_key(cfg: MVUConfig, *, epilogue: str = "raw", n_pixels: int = 1,
     ])
 
 
+def cycle_time_key(device: str | None = None) -> str:
+    """Cache key for the measured wall-clock seconds per schedule cycle.
+
+    Recorded by ``repro.serving.batcher.calibrate_cycle_time``; consumed by
+    ``dataflow.interval_seconds`` to turn the steady-state interval into the
+    serving batcher's flush time budget.
+    """
+    device = device_kind() if device is None else device
+    return f"cycletime|{device}"
+
+
 def engine_key(graph: Graph, *, device: str | None = None) -> str:
     """Cache key for engine-level (microbatch) tuning of one stage chain.
 

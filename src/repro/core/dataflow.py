@@ -64,6 +64,38 @@ class DataflowSchedule:
         }
 
 
+# The paper's RTL targets a 200 MHz FPGA clock (section 6); with no measured
+# cycle time this nominal clock converts schedule cycles to wall-clock time.
+DEFAULT_CLOCK_HZ = 200e6
+
+
+def interval_seconds(sched: DataflowSchedule, *, cache=None,
+                     device: str | None = None,
+                     clock_hz: float = DEFAULT_CLOCK_HZ) -> float:
+    """Wall-clock seconds per steady-state interval (one microbatch burst).
+
+    This is the bridge from the schedule's cycle algebra to serving-time
+    budgets: the continuous batcher flushes when a request's deadline slack
+    shrinks to one engine interval (``repro.serving.batcher``).  When an
+    autotune cache holds a *measured* cycle time for this device (recorded
+    by ``repro.serving.batcher.calibrate_cycle_time`` or a benchmark run),
+    that measurement wins; otherwise the nominal ``clock_hz`` converts the
+    analytic cycle count.
+    """
+    from repro.core import autotune
+
+    if cache is None:
+        try:
+            cache = autotune.default_cache()
+        except Exception:  # pragma: no cover - configs unavailable
+            cache = None
+    if cache is not None:
+        ent = cache.get(autotune.cycle_time_key(device))
+        if ent is not None and ent.get("s_per_cycle"):
+            return sched.steady_state_interval * float(ent["s_per_cycle"])
+    return sched.steady_state_interval / clock_hz
+
+
 def schedule(graph: Graph) -> DataflowSchedule:
     shape = None
     stages: list[StageInfo] = []

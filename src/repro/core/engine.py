@@ -164,8 +164,24 @@ class FusedEngine:
         ys = jax.lax.map(functools.partial(self._chain, params), xs)
         return ys.reshape(n_micro * mb, *ys.shape[2:])[:b]
 
+    def dispatch(self, x: jax.Array, *, params=None) -> tuple[jax.Array, StreamPlan]:
+        """Non-blocking submit: enqueue one batch, return the un-resolved
+        device array plus the stream plan it runs under.
+
+        JAX dispatch is asynchronous -- the call returns as soon as the
+        computation is enqueued on its device, so a serving front-end can go
+        straight back to admitting requests and block only when it resolves
+        the result (``np.asarray`` / ``jax.block_until_ready``).  ``params``
+        overrides the engine's resident parameters with a replica's copy
+        (``repro.serving.pool`` places them per device); the computation
+        runs wherever the committed operands live.
+        """
+        plan = self.plan(int(x.shape[0]))
+        out = self._jit(self.params if params is None else params, x, plan.n_micro)
+        return out, plan
+
     def __call__(self, x: jax.Array) -> jax.Array:
-        return self._jit(self.params, x, self.plan(int(x.shape[0])).n_micro)
+        return self.dispatch(x)[0]
 
     # ---------------------------------------------------------- multi-device
     def as_pipeline(self, mesh, *, axis: str = "stage"):

@@ -10,14 +10,17 @@ shards over "model" and GSPMD inserts the partial-softmax combine
 (flash-decode style) -- used for the long_500k cells.
 
 ``EngineServer`` is the dataflow-graph counterpart: a request-coalescing,
-shape-bucketed front-end over ``repro.core.engine.FusedEngine`` (used by the
-NID example and benchmarks/engine_throughput.py).
+shape-bucketed front-end over ``repro.core.engine.FusedEngine``.  It is now
+a thin deprecated shim over ``repro.serving`` (bounded admission queue +
+continuous batcher + replica pool); new code should use
+``repro.serving.ContinuousBatcher`` directly.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -59,78 +62,87 @@ def shard_serve_fns(model: Model, mesh, batch: int, max_len: int,
 @dataclasses.dataclass
 class EngineRequest:
     rid: int
-    x: np.ndarray  # one sample, engine input shape minus the batch dim
+    x: np.ndarray | None  # legacy field; the shim no longer retains inputs
     t_submit: float = 0.0
     t_done: float = 0.0
     out: np.ndarray | None = None
 
 
 class EngineServer:
-    """Batched serving front-end for ``repro.core.engine.FusedEngine``.
+    """DEPRECATED: thin shim over :mod:`repro.serving`.
 
-    Requests coalesce into padded shape buckets: a flush pads each pending
-    group up to the smallest bucket batch that holds it, so the engine's jit
-    cache sees only ``len(batch_buckets)`` executables no matter the traffic
-    pattern (the serving analog of the dry-run's fixed shape grid).  Oversize
-    groups split into max-bucket chunks.
+    The original synchronous, manually-flushed server now delegates to the
+    continuous-batching subsystem (bounded admission queue + batcher +
+    replica pool) while keeping its submit/flush API and bucket semantics:
+    a flush pads each pending group up to the smallest bucket batch that
+    holds it, oversize backlogs split into max-bucket chunks, and samples
+    are validated against the engine graph's input spec at ``submit`` (a
+    malformed request fails there with a clear error, not inside the
+    flush-time stack).  New code should use
+    ``repro.serving.ContinuousBatcher`` (SLO-aware flushing, async
+    multi-replica dispatch, metrics) directly.
     """
 
     def __init__(self, engine, *, batch_buckets: tuple[int, ...] = (1, 8, 32, 128)):
         if not batch_buckets or any(b <= 0 for b in batch_buckets):
             raise ValueError(f"need positive bucket sizes, got {batch_buckets}")
+        warnings.warn(
+            "EngineServer is deprecated; use repro.serving.ContinuousBatcher",
+            DeprecationWarning, stacklevel=2)
+        from repro.serving import ContinuousBatcher
+
         self.engine = engine
         self.buckets = tuple(sorted(set(batch_buckets)))
-        self._pending: list[EngineRequest] = []
-        self._next_rid = 0
-        self.stats = {"requests": 0, "flushes": 0, "padded_samples": 0}
+        # manual-flush compatibility: no idle-greedy or deadline-triggered
+        # launches, an effectively unbounded queue, flush() drives everything
+        self._batcher = ContinuousBatcher(
+            engine, batch_buckets=self.buckets, greedy_when_idle=False,
+            queue_capacity=1 << 30)
+
+    @property
+    def stats(self) -> dict:
+        c = self._batcher.metrics.counters
+        return {"requests": c["requests"], "flushes": c["flushes"],
+                "padded_samples": c["padded_samples"]}
+
+    @property
+    def _pending(self) -> list[int]:
+        """Rids awaiting a flush (legacy probe; lives in the batcher queue)."""
+        return self._batcher.queue.pending_rids()
 
     def submit(self, x: np.ndarray) -> int:
         """Queue one sample; returns its request id (resolved by flush)."""
-        rid = self._next_rid
-        self._next_rid += 1
-        self._pending.append(EngineRequest(rid, np.asarray(x), time.perf_counter()))
-        self.stats["requests"] += 1
-        return rid
+        return self._batcher.submit(x)
 
     def submit_batch(self, xs: np.ndarray) -> list[int]:
-        """Queue a multi-sample request (leading batch dim); returns one rid
-        per sample.  Requests larger than the biggest bucket are legal: flush
-        splits the backlog across max-size bucket launches."""
-        return [self.submit(x) for x in np.asarray(xs)]
+        """Queue a multi-sample request (leading batch dim) as ONE block --
+        no per-sample array copies -- returning one rid per sample.
+        Requests larger than the biggest bucket are legal: flush splits the
+        backlog across max-size bucket launches."""
+        return self._batcher.submit_batch(xs)
 
     def _bucket_for(self, n: int) -> int:
-        for b in self.buckets:
-            if n <= b:
-                return b
-        # No bucket holds n samples.  Returning the max bucket here would
-        # silently launch an unbucketed (n-sized) jit shape; oversized groups
-        # must be split across max-size buckets by flush() instead.
-        raise ValueError(
-            f"group of {n} exceeds the largest bucket {self.buckets[-1]}; "
-            "flush() must split it first"
-        )
+        # No bucket holds an oversize n: returning the max bucket would
+        # silently launch an unbucketed (n-sized) jit shape, so this raises
+        # and flush() splits oversize backlogs across max-size buckets.
+        return self._batcher.bucket_for(n)
 
     def flush(self) -> list[EngineRequest]:
         """Coalesce pending requests, run the engine, scatter the results.
 
         Backlogs larger than the biggest bucket split into max-bucket chunks,
-        so the engine only ever sees bucket-sized batches."""
+        so the engine only ever sees bucket-sized batches.  Each launch is
+        resolved and popped before the next starts (the legacy synchronous
+        per-group execution), so the batcher's bounded result store never
+        has to hold more than one bucket of a giant backlog."""
+        b = self._batcher
         done: list[EngineRequest] = []
-        while self._pending:
-            group = self._pending[: self.buckets[-1]]
-            self._pending = self._pending[len(group) :]
-            bucket = self._bucket_for(len(group))
-            xs = np.stack([r.x for r in group])
-            if bucket > len(group):  # pad up to the bucket's batch shape
-                pad = np.zeros((bucket - len(group),) + xs.shape[1:], xs.dtype)
-                xs = np.concatenate([xs, pad])
-                self.stats["padded_samples"] += bucket - len(group)
-            ys = np.asarray(self.engine(jnp.asarray(xs)))
-            t1 = time.perf_counter()
-            for r, y in zip(group, ys):
-                r.out, r.t_done = y, t1
-            done.extend(group)
-            self.stats["flushes"] += 1
+        while b.queue.depth:
+            b._launch(min(b.queue.depth, b.buckets[-1]))
+            for rid in sorted(b.harvest(block=True)):
+                r = b.pop_result(rid)
+                done.append(EngineRequest(rid, None, r.t_submit, r.t_done, r.out))
+        done.sort(key=lambda r: r.rid)
         return done
 
 

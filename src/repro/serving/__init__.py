@@ -1,0 +1,63 @@
+"""Production serving subsystem over :class:`repro.core.engine.FusedEngine`.
+
+The paper's dataflow argument made operational: steady-state throughput is
+set by the bottleneck stage's initiation interval, small FIFOs absorb
+bursts, and nothing is allowed to grow without bound.  The serving layer
+honors the same contract at the front door:
+
+* :mod:`repro.serving.queue` -- bounded admission queue with backpressure
+  (reject / shed policies), per-request deadlines, and input validation
+  against the engine graph's spec,
+* :mod:`repro.serving.batcher` -- continuous batcher whose flush policy is
+  derived from the dataflow schedule (flush when a bucket fills, when the
+  pipeline is idle, or when the oldest request's deadline slack shrinks to
+  one engine flush budget),
+* :mod:`repro.serving.pool` -- multi-replica pool (params ``device_put``
+  onto each local device, least-loaded async dispatch, blocking only at
+  result resolution),
+* :mod:`repro.serving.metrics` -- p50/p95/p99 latency, throughput,
+  queue-depth and padding counters with a snapshot API.
+
+Quickstart::
+
+    from repro.serving import ContinuousBatcher
+
+    batcher = ContinuousBatcher(engine, batch_buckets=(1, 8, 32), slo_s=0.05)
+    rid = batcher.submit(x)            # validated, bounded admission
+    while batcher.pop_result(rid) is None:
+        batcher.poll()                 # harvest + SLO-aware flushing
+    print(batcher.metrics.snapshot())  # p99, throughput, padding overhead
+
+The legacy ``repro.launch.serve.EngineServer`` is a thin deprecated shim
+over this package.
+"""
+
+from repro.serving.batcher import (
+    CompletedRequest,
+    ContinuousBatcher,
+    calibrate_cycle_time,
+)
+from repro.serving.metrics import ServingMetrics
+from repro.serving.pool import PendingBatch, Replica, ReplicaPool
+from repro.serving.queue import (
+    AdmissionQueue,
+    Block,
+    Entry,
+    InputSpec,
+    QueueFull,
+)
+
+__all__ = [
+    "AdmissionQueue",
+    "Block",
+    "CompletedRequest",
+    "ContinuousBatcher",
+    "Entry",
+    "InputSpec",
+    "PendingBatch",
+    "QueueFull",
+    "Replica",
+    "ReplicaPool",
+    "ServingMetrics",
+    "calibrate_cycle_time",
+]

@@ -1,0 +1,305 @@
+"""Continuous batcher: SLO-aware flushing derived from the dataflow schedule.
+
+The flush policy is the FINN FIFO-sizing rule applied to wall-clock time
+(paper section 5.3): steady-state throughput is set by the bottleneck
+stage's initiation interval, small buffers absorb bursts, and a burst is
+released downstream as soon as either
+
+* a **bucket fills** -- one full producer burst is ready, ship it,
+* the **pipeline is idle** -- holding work while the engine sits empty buys
+  nothing (the continuous-batching insight: waiting is only useful when the
+  device is busy), or
+* the **oldest request's slack runs out** -- the time left to its deadline
+  has shrunk to one engine flush budget (``DataflowSchedule.
+  steady_state_interval`` converted to seconds via
+  ``dataflow.interval_seconds``, times the bucket's microbatch count), so
+  deferring any further would miss the SLO.
+
+``ContinuousBatcher`` owns an :class:`~repro.serving.queue.AdmissionQueue`
+(bounded, validating, backpressured), a
+:class:`~repro.serving.pool.ReplicaPool` (async least-loaded dispatch) and
+a :class:`~repro.serving.metrics.ServingMetrics`; ``poll`` advances the
+whole machine one non-blocking step and is the only method a serving loop
+needs to call.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import numpy as np
+
+from repro.core import dataflow
+from repro.serving.metrics import ServingMetrics
+from repro.serving.pool import PendingBatch, ReplicaPool
+from repro.serving.queue import AdmissionQueue, InputSpec, QueueFull
+
+
+@dataclasses.dataclass(frozen=True)
+class CompletedRequest:
+    """A finished request: output row + the timestamps the SLO math needs.
+
+    A request dropped by the queue's shed policy also resolves here, with
+    ``out is None`` (``shed`` True) -- so a ``pop_result``/``poll`` wait
+    loop always terminates, it never spins on a rid that left the system.
+    """
+
+    rid: int
+    out: np.ndarray | None
+    t_submit: float
+    t_done: float
+    deadline: float
+
+    @property
+    def latency_s(self) -> float:
+        return self.t_done - self.t_submit
+
+    @property
+    def missed_deadline(self) -> bool:
+        return self.t_done > self.deadline
+
+    @property
+    def shed(self) -> bool:
+        return self.out is None
+
+
+def calibrate_cycle_time(engine, *, batch: int = 128, reps: int = 3,
+                         cache=None, device: str | None = None) -> dict:
+    """Measure the engine's realized wall-clock seconds per schedule cycle.
+
+    The analytic schedule counts cycles; serving deadlines are seconds.  One
+    timed run of the fused engine divides measured time by the plan's
+    ``n_micro * steady_state_interval`` to get the device's realized cycle
+    time, recorded under :func:`repro.core.autotune.cycle_time_key` so
+    ``dataflow.interval_seconds`` (and every batcher built afterwards) uses
+    the measurement instead of the nominal clock.
+    """
+    from repro.core import autotune
+
+    x = autotune.synth_input(engine.graph, batch)
+    jax.block_until_ready(engine(x))  # compile outside the timed region
+    ts = []
+    for _ in range(max(1, reps)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(engine(x))
+        ts.append(time.perf_counter() - t0)
+    plan = engine.plan(batch)
+    cycles = max(1, plan.n_micro * max(plan.interval_cycles, 1))
+    entry = {
+        "s_per_cycle": float(min(ts)) / cycles,
+        "batch": int(batch),
+        "n_micro": int(plan.n_micro),
+        "measured_s": float(min(ts)),
+    }
+    if cache is not None:
+        cache.put(autotune.cycle_time_key(device), entry)
+    return entry
+
+
+class ContinuousBatcher:
+    """Continuous batching front-end over one :class:`FusedEngine`.
+
+    Parameters
+    ----------
+    batch_buckets: the padded jit shapes (same contract as the legacy
+        ``EngineServer``): a launch pads up to the smallest bucket holding
+        it, so the jit cache stays bounded under any traffic pattern.
+    slo_s: default per-request latency budget; ``submit(deadline=...)``
+        overrides per request.  ``None`` disables deadline-triggered
+        flushing (bucket-fill and idle-greedy still apply).
+    queue_capacity / policy: admission bound and overflow behavior
+        (``"reject"`` raises :class:`QueueFull`, ``"shed"`` drops the
+        oldest).  Defaults to 8 max-size bursts -- the decoupling-FIFO
+        bound; a deeper queue only hides latency the SLO already lost.
+    interval_s: seconds per steady-state interval; defaults to
+        ``dataflow.interval_seconds`` (measured cycle time when the
+        autotune ``cache`` holds one, nominal clock otherwise).
+    greedy_when_idle: flush a partial bucket whenever no replica has work
+        in flight (set False to batch strictly by deadline/bucket -- the
+        legacy manual-flush behavior).
+    """
+
+    def __init__(self, engine, *, batch_buckets: tuple[int, ...] = (1, 8, 32, 128),
+                 slo_s: float | None = None, queue: AdmissionQueue | None = None,
+                 pool: ReplicaPool | None = None, metrics: ServingMetrics | None = None,
+                 cache=None, interval_s: float | None = None,
+                 greedy_when_idle: bool = True, safety: float = 2.0,
+                 queue_capacity: int | None = None, policy: str = "reject",
+                 result_capacity: int = 8192, clock=time.perf_counter):
+        if not batch_buckets or any(b <= 0 for b in batch_buckets):
+            raise ValueError(f"need positive bucket sizes, got {batch_buckets}")
+        self.engine = engine
+        self.buckets = tuple(sorted(set(batch_buckets)))
+        self.spec = InputSpec.from_graph(engine.graph)
+        self._clock = clock
+        self.metrics = metrics if metrics is not None else ServingMetrics(clock=clock)
+        if queue_capacity is None:
+            queue_capacity = 8 * self.buckets[-1]
+        self.queue = queue if queue is not None else AdmissionQueue(
+            self.spec, capacity=queue_capacity, policy=policy,
+            default_slo_s=slo_s, clock=clock)
+        self.pool = pool if pool is not None else ReplicaPool(engine, clock=clock)
+        self.greedy_when_idle = greedy_when_idle
+        if interval_s is None:
+            interval_s = dataflow.interval_seconds(engine.schedule, cache=cache)
+        self.interval_s = float(interval_s)
+        # flush budget per bucket: the wall-clock the engine needs to stream
+        # that bucket (n_micro bursts at one interval each), padded by a
+        # safety factor for dispatch overhead -- when a request's deadline
+        # slack shrinks to this, the batch must leave NOW to meet its SLO.
+        self.budgets = {b: engine.plan(b).n_micro * self.interval_s * safety
+                        for b in self.buckets}
+        self._inflight: list[PendingBatch] = []
+        # bounded like every other buffer in the system: results a client
+        # never collects evict oldest-first once result_capacity is reached
+        # (the abandoned-rid leak guard; metrics' reservoir bounds the same
+        # way), so a long-running server's memory stays flat
+        self.result_capacity = result_capacity
+        self.results: dict[int, CompletedRequest] = {}
+        self.shed: list[int] = []
+
+    def warmup(self) -> "ContinuousBatcher":
+        """Precompile every bucket shape on every replica (startup cost,
+        never paid inside the serving loop)."""
+        self.pool.warmup(self.buckets)
+        return self
+
+    # ------------------------------------------------------------ admission
+    def submit(self, x, *, deadline: float | None = None,
+               now: float | None = None) -> int:
+        """Validate + enqueue one sample; returns its request id."""
+        try:
+            rid = self.queue.admit(x, deadline=deadline, now=now)
+        except QueueFull:
+            self.metrics.count("rejected")
+            raise
+        self.metrics.count("requests")
+        self._note_shed(now)
+        self.metrics.observe_depth(self.queue.depth)
+        return rid
+
+    def submit_batch(self, xs, *, deadline: float | None = None,
+                     now: float | None = None) -> list[int]:
+        """Enqueue a (B, *spec.shape) batch as one block; per-sample rids."""
+        try:
+            rids = self.queue.admit_batch(xs, deadline=deadline, now=now)
+        except QueueFull:
+            self.metrics.count("rejected", np.asarray(xs).shape[0])
+            raise
+        self.metrics.count("requests", len(rids))
+        self._note_shed(now)
+        self.metrics.observe_depth(self.queue.depth)
+        return rids
+
+    def _note_shed(self, now: float | None = None) -> None:
+        dropped = self.queue.drain_shed()
+        if dropped:
+            now = self._clock() if now is None else now
+            for e in dropped:
+                # a shed request resolves with out=None so result waiters
+                # terminate instead of spinning on a rid that left the system
+                self._record(CompletedRequest(
+                    e.rid, None, e.t_submit, now, e.deadline))
+            self.shed.extend(e.rid for e in dropped)
+            self.metrics.count("shed", len(dropped))
+
+    # -------------------------------------------------------------- buckets
+    def bucket_for(self, n: int) -> int:
+        for b in self.buckets:
+            if n <= b:
+                return b
+        raise ValueError(
+            f"group of {n} exceeds the largest bucket {self.buckets[-1]}; "
+            "oversized backlogs split across max-size bucket launches"
+        )
+
+    # ------------------------------------------------------------- dispatch
+    def _launch(self, n: int) -> PendingBatch:
+        entries, xs = self.queue.pop(n)
+        bucket = self.bucket_for(len(entries))
+        pad = bucket - len(entries)
+        if pad:
+            xs = np.concatenate(
+                [xs, np.zeros((pad, *xs.shape[1:]), xs.dtype)])
+        pending = self.pool.dispatch(xs, entries, n_valid=len(entries))
+        self._inflight.append(pending)
+        self.metrics.count("flushes")
+        self.metrics.count("padded_samples", pad)
+        self.metrics.count("dispatched_samples", bucket)
+        self.metrics.observe_depth(self.queue.depth)
+        return pending
+
+    def harvest(self, *, block: bool = False,
+                now: float | None = None) -> list[int]:
+        """Collect finished launches; non-blocking unless ``block``."""
+        done: list[int] = []
+        still: list[PendingBatch] = []
+        for pending in self._inflight:
+            if not (block or pending.ready()):
+                still.append(pending)
+                continue
+            ys = pending.resolve()  # blocks only if not already ready
+            t_done = self._clock() if now is None else now
+            for entry, y in zip(pending.entries, ys):
+                self._record(CompletedRequest(
+                    entry.rid, y, entry.t_submit, t_done, entry.deadline))
+                self.metrics.observe_latency(t_done - entry.t_submit, now=t_done)
+                if t_done > entry.deadline:
+                    self.metrics.count("deadline_misses")
+                done.append(entry.rid)
+        self._inflight = still
+        return done
+
+    def poll(self, now: float | None = None) -> list[int]:
+        """One non-blocking serving step: harvest, then flush what's due.
+
+        Full buckets always ship; a partial bucket ships when every replica
+        is idle (``greedy_when_idle``) or when the oldest request's deadline
+        slack has shrunk to the bucket's flush budget.  Returns the rids
+        completed this step (their results are in :attr:`results`).
+        """
+        now = self._clock() if now is None else now
+        done = self.harvest(now=now)
+        self._note_shed(now)
+        while self.queue.depth >= self.buckets[-1]:
+            self._launch(self.buckets[-1])
+        depth = self.queue.depth
+        if depth:
+            # the tightest deadline anywhere in the queue, not the FIFO
+            # head's: a later arrival may carry an urgent override, and the
+            # launch drains the whole (FIFO) backlog up to it anyway
+            slack = self.queue.min_deadline() - now
+            if ((self.greedy_when_idle and self.pool.idle)
+                    or slack <= self.budgets[self.bucket_for(depth)]):
+                self._launch(depth)
+        return done
+
+    def flush_all(self) -> None:
+        """Launch every queued request immediately (bucket-split)."""
+        while self.queue.depth:
+            self._launch(min(self.queue.depth, self.buckets[-1]))
+
+    def drain(self) -> list[int]:
+        """Flush and resolve everything outstanding (blocking)."""
+        done: list[int] = []
+        while self.queue.depth or self._inflight:
+            self.flush_all()
+            done.extend(self.harvest(block=True))
+        self._note_shed()
+        return done
+
+    # --------------------------------------------------------------- results
+    def _record(self, req: CompletedRequest) -> None:
+        self.results[req.rid] = req
+        while len(self.results) > self.result_capacity:
+            self.results.pop(next(iter(self.results)))  # evict oldest
+
+    @property
+    def outstanding(self) -> int:
+        """Samples admitted but not yet resolved (queued + in flight)."""
+        return self.queue.depth + sum(p.n_valid for p in self._inflight)
+
+    def pop_result(self, rid: int) -> CompletedRequest | None:
+        return self.results.pop(rid, None)

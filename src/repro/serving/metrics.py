@@ -1,0 +1,85 @@
+"""Serving metrics: latency percentiles, throughput, queue depth, padding.
+
+One ``ServingMetrics`` instance is shared by the admission queue, the
+continuous batcher, and the replica pool; ``snapshot`` condenses it into a
+plain dict (the monitoring-endpoint payload).  Latencies live in a bounded
+reservoir so a long-running server never grows without bound -- the FINN
+FIFO rule applied to the bookkeeping itself.
+"""
+
+from __future__ import annotations
+
+import collections
+import time
+
+import numpy as np
+
+PERCENTILES = (50.0, 95.0, 99.0)
+
+
+class ServingMetrics:
+    """Counters + gauges + a bounded latency reservoir with a snapshot API."""
+
+    COUNTERS = (
+        "requests", "completed", "rejected", "shed", "flushes",
+        "padded_samples", "deadline_misses", "dispatched_samples",
+    )
+
+    def __init__(self, *, reservoir: int = 8192, clock=time.perf_counter):
+        self.counters: dict[str, int] = {k: 0 for k in self.COUNTERS}
+        self._lat = collections.deque(maxlen=reservoir)
+        self._clock = clock
+        self._t_first: float | None = None
+        self._t_last: float | None = None
+        self.queue_depth = 0
+        self.max_queue_depth = 0
+
+    # ------------------------------------------------------------- recording
+    def count(self, key: str, n: int = 1) -> None:
+        self.counters[key] = self.counters.get(key, 0) + n
+
+    def observe_depth(self, depth: int) -> None:
+        self.queue_depth = depth
+        self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    def observe_latency(self, seconds: float, *, now: float | None = None) -> None:
+        now = self._clock() if now is None else now
+        if self._t_first is None:
+            self._t_first = now
+        self._t_last = now
+        self._lat.append(seconds)
+        self.count("completed")
+
+    # -------------------------------------------------------------- snapshot
+    def latency_percentiles(self) -> dict[str, float]:
+        if not self._lat:
+            return {f"p{int(p)}_ms": float("nan") for p in PERCENTILES}
+        arr = np.asarray(self._lat)
+        return {f"p{int(p)}_ms": float(np.percentile(arr, p)) * 1e3
+                for p in PERCENTILES}
+
+    def throughput(self) -> float:
+        """Completed samples per second over the observed completion window."""
+        if self._t_first is None or self._t_last is None:
+            return 0.0
+        span = self._t_last - self._t_first
+        if span <= 0:
+            return 0.0
+        return self.counters["completed"] / span
+
+    def padding_overhead(self) -> float:
+        """Fraction of dispatched engine slots that were padding."""
+        total = self.counters["dispatched_samples"]
+        if total <= 0:
+            return 0.0
+        return self.counters["padded_samples"] / total
+
+    def snapshot(self) -> dict:
+        return {
+            **self.counters,
+            **self.latency_percentiles(),
+            "samples_per_s": self.throughput(),
+            "queue_depth": self.queue_depth,
+            "max_queue_depth": self.max_queue_depth,
+            "padding_overhead": self.padding_overhead(),
+        }

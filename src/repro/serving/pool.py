@@ -1,0 +1,123 @@
+"""Multi-replica engine pool: least-loaded async dispatch over local devices.
+
+The paper scales one dataflow build across SLRs/FPGAs by replication; the
+runtime analog replicates the fused engine's parameters onto every local
+device (``jax.device_put`` once, at pool construction) and dispatches
+bucket batches to the least-loaded replica.  JAX dispatch is asynchronous:
+``dispatch`` returns as soon as the computation is enqueued on the device,
+so the host thread goes straight back to admitting requests -- blocking
+happens only at result *resolution* (``PendingBatch.resolve``), and
+``PendingBatch.ready`` polls completion without blocking.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.serving.queue import Entry
+
+
+@dataclasses.dataclass
+class Replica:
+    index: int
+    device: jax.Device
+    params: list  # engine param pytrees, resident on ``device``
+    inflight: int = 0
+    dispatched: int = 0
+
+
+class PendingBatch:
+    """One in-flight engine launch: an un-resolved device array + bookkeeping."""
+
+    def __init__(self, out: jax.Array, entries: list[Entry], n_valid: int,
+                 replica: Replica, plan, t_dispatch: float):
+        self.out = out
+        self.entries = entries
+        self.n_valid = n_valid  # leading rows that are real samples (rest pad)
+        self.replica = replica
+        self.plan = plan
+        self.t_dispatch = t_dispatch
+        self._resolved: np.ndarray | None = None
+
+    def ready(self) -> bool:
+        """True when the device result can be resolved without blocking."""
+        if self._resolved is not None:
+            return True
+        is_ready = getattr(self.out, "is_ready", None)
+        return bool(is_ready()) if is_ready is not None else True
+
+    def resolve(self) -> np.ndarray:
+        """Block until done; returns the valid (un-padded) output rows."""
+        if self._resolved is None:
+            self._resolved = np.asarray(self.out)[: self.n_valid]
+            self.replica.inflight -= 1
+        return self._resolved
+
+
+class ReplicaPool:
+    """Engine parameters replicated across devices, least-loaded dispatch."""
+
+    def __init__(self, engine, devices: list[jax.Device] | None = None, *,
+                 clock=time.perf_counter):
+        devices = list(devices) if devices is not None else jax.local_devices()
+        if not devices:
+            raise ValueError("need at least one device for the replica pool")
+        self.engine = engine
+        self._clock = clock
+        self.replicas = [
+            Replica(i, d, jax.device_put(engine.params, d))
+            for i, d in enumerate(devices)
+        ]
+
+    def __len__(self) -> int:
+        return len(self.replicas)
+
+    @property
+    def total_inflight(self) -> int:
+        return sum(r.inflight for r in self.replicas)
+
+    @property
+    def idle(self) -> bool:
+        return self.total_inflight == 0
+
+    def pick(self) -> Replica:
+        return min(self.replicas, key=lambda r: (r.inflight, r.index))
+
+    def dispatch(self, xs: np.ndarray, entries: list[Entry],
+                 n_valid: int | None = None) -> PendingBatch:
+        """Enqueue one bucket batch on the least-loaded replica (non-blocking)."""
+        replica = self.pick()
+        x = jax.device_put(jnp.asarray(xs), replica.device)
+        out, plan = self.engine.dispatch(x, params=replica.params)
+        replica.inflight += 1
+        replica.dispatched += 1
+        return PendingBatch(out, entries,
+                            len(entries) if n_valid is None else n_valid,
+                            replica, plan, self._clock())
+
+    def warmup(self, batch_sizes) -> None:
+        """Precompile the bucket shape grid through the real dispatch path.
+
+        A committed (``device_put``) operand keys the jit cache differently
+        from an uncommitted one, so warming must go through the same
+        device-placement the serving dispatch uses -- once per (bucket,
+        replica device), at startup, exactly like the dry-run's fixed shape
+        grid.
+        """
+        from repro.core import autotune
+
+        for b in sorted(set(batch_sizes)):
+            x0 = autotune.synth_input(self.engine.graph, b)
+            for r in self.replicas:
+                x = jax.device_put(x0, r.device)
+                out, _ = self.engine.dispatch(x, params=r.params)
+                jax.block_until_ready(out)
+
+    def load(self) -> dict[int, int]:
+        """Replica index -> total batches dispatched (load-spread probe)."""
+        return {r.index: r.dispatched for r in self.replicas}

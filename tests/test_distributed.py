@@ -228,6 +228,70 @@ def test_grad_compression_converges():
     assert "OK" in out
 
 
+def test_as_pipeline_rejects_unstackable_graphs():
+    """FusedEngine.as_pipeline error paths (the happy path runs in
+    tests/test_engine.py): heterogeneous ops, heterogeneous MVU shapes,
+    mixed epilogue forms, and the xnor packed-width rejection must all fail
+    with clear errors before any device work happens."""
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import lowering
+    from repro.core.engine import FusedEngine
+    from repro.core.ir import Node
+
+    rng = np.random.default_rng(31)
+    mesh = jax.make_mesh((1,), ("stage",))
+
+    def mlp(dims, bits, with_bn=True):
+        g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+        for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+            w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+            g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+            if with_bn and i < len(dims) - 2:
+                g.append(Node("batchnorm", f"bn{i}", {}, {
+                    "gamma": jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32)),
+                    "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
+                    "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+                    "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
+                }))
+                g.append(Node("quant_act", f"act{i}",
+                              {"bits": bits, "act_scale": 1.0}))
+        return g
+
+    def engine(dims, mode, bits, **kw):
+        fin = lowering.finalize(lowering.lower_to_mvu(
+            mlp(dims, bits, **kw), mode=mode, weight_bits=4, act_bits=bits))
+        return FusedEngine(fin)
+
+    # heterogeneous ops: a conv graph keeps a conv_mvu node in the chain
+    g = [Node("input", "in", {"shape": (6, 6, 3), "bits": 2}),
+         Node("conv", "c0", {"kernel": 3, "stride": 1, "pad": 0},
+              {"w": jnp.asarray(rng.normal(0, 0.5, (3, 3, 3, 4)).astype(np.float32))})]
+    conv_engine = FusedEngine(lowering.finalize(
+        lowering.lower_to_mvu(g, mode="standard", weight_bits=4, act_bits=2)))
+    with pytest.raises(ValueError, match="pure MVU chain"):
+        conv_engine.as_pipeline(mesh)
+
+    # heterogeneous (N, K) stage shapes cannot stack into one layer_fn
+    with pytest.raises(ValueError, match="homogeneous"):
+        engine([24, 16, 8], "standard", 2).as_pipeline(mesh)
+
+    # xnor stages: the static packed width breaks parameter stacking
+    with pytest.raises(ValueError, match="xnor"):
+        engine([32, 32, 32], "xnor", 1).as_pipeline(mesh)
+
+    # mixed epilogue forms: hidden stage carries fused thresholds, the head
+    # runs raw accumulators -- stacking would silently change semantics
+    mixed = engine([16, 16, 16], "standard", 2)
+    mvus = [n for n in mixed.graph if n.op == "mvu"]
+    assert mvus[0].params["mvu"].thresholds is not None
+    assert mvus[-1].params["mvu"].thresholds is None
+    with pytest.raises(ValueError, match="epilogue"):
+        mixed.as_pipeline(mesh)
+
+
 def test_dryrun_cell_lowers_on_host_mesh():
     """The dry-run cell builder (shardings + lower + compile + cost) works
     on a small host mesh with a reduced config — CI-scale proof of the

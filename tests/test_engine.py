@@ -181,6 +181,52 @@ def test_engine_server_splits_oversized_submissions():
         np.testing.assert_array_equal(done[rid].out, want[i])
 
 
+def test_engine_server_validates_requests_at_submit():
+    """Regression: a sample whose shape/dtype disagrees with the engine
+    graph's input spec used to die inside np.stack at flush time with a
+    cryptic error; it must fail at submit with a clear ValueError."""
+    from repro.launch.serve import EngineServer
+
+    bits = 2
+    rng = np.random.default_rng(23)
+    fin = _finalized(_mlp_graph(rng, [24, 16, 8], bits), "standard", bits)
+    server = EngineServer(FusedEngine(fin), batch_buckets=(1, 4, 8))
+
+    with pytest.raises(ValueError, match="input spec"):
+        server.submit(np.zeros(25, np.int32))  # wrong feature width
+    with pytest.raises(ValueError, match="integer"):
+        server.submit(np.zeros(24, np.float32))  # wrong dtype
+    with pytest.raises(ValueError, match="input spec"):
+        server.submit_batch(np.zeros((3, 23), np.int32))
+    # nothing leaked into the queue; a well-formed request still works
+    assert not server._pending and server.stats["requests"] == 0
+    rid = server.submit(np.zeros(24, np.int32))
+    done = server.flush()
+    assert [r.rid for r in done] == [rid] and done[0].out is not None
+
+
+def test_engine_server_submit_batch_enqueues_one_block():
+    """Regression: submit_batch looped Python-per-sample over the batch;
+    it must enqueue one shared-buffer block while rids stay per-sample."""
+    from repro.launch.serve import EngineServer
+
+    bits = 2
+    rng = np.random.default_rng(29)
+    fin = _finalized(_mlp_graph(rng, [24, 16, 8], bits), "standard", bits)
+    engine = FusedEngine(fin)
+    server = EngineServer(engine, batch_buckets=(1, 4, 8))
+
+    xs = rng.integers(0, 2**bits, (6, 24)).astype(np.int32)
+    rids = server.submit_batch(xs)
+    assert rids == list(range(6))  # one rid per sample
+    blocks = server._batcher.queue._blocks
+    assert len(blocks) == 1 and np.shares_memory(blocks[0].xs, xs)
+    done = {r.rid: r for r in server.flush()}
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(done[rid].out, want[i])
+
+
 def test_engine_pipeline_multidevice_matches_single():
     """as_pipeline on a 4-stage host mesh == single-device fused engine
     (subprocess so XLA_FLAGS never leaks into this pytest process)."""

@@ -1,0 +1,388 @@
+"""repro.serving tests: bounded admission (validation + backpressure),
+continuous batcher (bit-exactness, bucket accounting, SLO-aware flush
+policy), replica pool dispatch (single + multi device), metrics snapshots,
+and the lower-is-better branch of the CI regression gate."""
+
+import importlib.util
+import math
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import dataflow, lowering
+from repro.core.autotune import ScheduleCache, cycle_time_key
+from repro.core.engine import FusedEngine
+from repro.core.ir import Node
+from repro.serving import (
+    AdmissionQueue,
+    ContinuousBatcher,
+    InputSpec,
+    QueueFull,
+    ReplicaPool,
+    ServingMetrics,
+    calibrate_cycle_time,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _mlp_graph(dims=(24, 16, 8), bits=2, seed=3):
+    rng = np.random.default_rng(seed)
+    g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("batchnorm", f"bn{i}", {}, {
+                "gamma": jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32)),
+                "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
+                "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+                "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
+            }))
+            g.append(Node("quant_act", f"act{i}", {"bits": bits, "act_scale": 1.0}))
+    return lowering.finalize(
+        lowering.lower_to_mvu(g, mode="standard", weight_bits=4, act_bits=bits))
+
+
+def _engine(**kw):
+    return FusedEngine(_mlp_graph(), **kw)
+
+
+def _samples(n, k=24, bits=2, seed=0):
+    return np.random.default_rng(seed).integers(0, 2**bits, (n, k)).astype(np.int32)
+
+
+# ---------------------------------------------------------------- admission
+def test_input_spec_validates_shape_and_dtype_at_admission():
+    engine = _engine()
+    spec = InputSpec.from_graph(engine.graph)
+    assert spec.shape == (24,) and spec.bits == 2
+    q = AdmissionQueue(spec)
+    with pytest.raises(ValueError, match="input spec"):
+        q.admit(np.zeros(25, np.int32))
+    with pytest.raises(ValueError, match="integer"):
+        q.admit(np.zeros(24, np.float32))
+    with pytest.raises(ValueError, match="input spec"):
+        q.admit_batch(np.zeros((3, 23), np.int32))
+    assert q.depth == 0
+    q.admit(np.zeros(24, np.int32))
+    assert q.depth == 1
+    # non-canonical integer dtypes are converted, not rejected: the jit
+    # cache must stay at one executable per bucket under any traffic
+    q.admit(np.zeros(24, np.int64))
+    q.admit_batch(np.zeros((2, 24), np.int8))
+    _, xs = q.pop(4)
+    assert xs.dtype == np.int32
+
+
+def test_queue_reject_policy_backpressure():
+    q = AdmissionQueue(InputSpec((4,), 2), capacity=4)
+    q.admit_batch(np.zeros((4, 4), np.int32))
+    with pytest.raises(QueueFull, match="full"):
+        q.admit(np.zeros(4, np.int32))
+    assert q.depth == 4  # the rejected arrival left no trace
+    with pytest.raises(ValueError, match="capacity"):
+        q.admit_batch(np.zeros((9, 4), np.int32))  # can never fit
+
+
+def test_queue_shed_policy_drops_oldest():
+    q = AdmissionQueue(InputSpec((4,), 2), capacity=4, policy="shed")
+    first = q.admit_batch(np.arange(16, dtype=np.int32).reshape(4, 4))
+    extra = q.admit_batch(np.zeros((2, 4), np.int32))
+    assert q.depth == 4
+    assert [e.rid for e in q.drain_shed()] == first[:2]  # oldest made room
+    entries, xs = q.pop(4)
+    assert [e.rid for e in entries] == first[2:] + extra
+    np.testing.assert_array_equal(xs[:2], np.arange(16).reshape(4, 4)[2:])
+
+
+def test_batcher_resolves_shed_requests_so_waiters_terminate():
+    """A shed rid must resolve as a CompletedRequest with out=None -- the
+    documented pop_result/poll wait loop has to terminate, not spin."""
+    engine = _engine()
+    batcher = ContinuousBatcher(engine, batch_buckets=(1, 4),
+                                queue_capacity=4, policy="shed")
+    xs = _samples(6)
+    victims = [batcher.submit(xs[i]) for i in range(4)]
+    survivor_batch = batcher.submit_batch(xs[4:])  # sheds the two oldest
+    r = batcher.pop_result(victims[0])
+    assert r is not None and r.shed and r.out is None
+    assert batcher.shed == victims[:2]
+    assert batcher.metrics.counters["shed"] == 2
+    batcher.drain()
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(victims[2:] + survivor_batch, start=2):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+
+
+def test_queue_batch_enqueue_is_one_block_without_copies():
+    """submit_batch must enqueue ONE block sharing the caller's buffer while
+    rids stay per-sample (the legacy server looped Python-per-sample)."""
+    q = AdmissionQueue(InputSpec((4,), 2), capacity=64)
+    xs = _samples(6, k=4)
+    rids = q.admit_batch(xs)
+    assert rids == list(range(6))  # one rid per sample
+    assert len(q._blocks) == 1 and np.shares_memory(q._blocks[0].xs, xs)
+    # partial pops slice the block (views), preserving FIFO rid order
+    entries, head = q.pop(4)
+    assert [e.rid for e in entries] == [0, 1, 2, 3]
+    assert np.shares_memory(head, xs)
+    assert [e.rid for e in q.pop(10)[0]] == [4, 5]
+
+
+def test_queue_deadlines_and_fifo_slack():
+    q = AdmissionQueue(InputSpec((4,), 2), default_slo_s=0.5)
+    q.admit(np.zeros(4, np.int32), now=1.0)
+    q.admit(np.zeros(4, np.int32), deadline=1.2, now=1.1)
+    assert q.oldest_deadline() == 1.5  # FIFO head's deadline
+    assert q.min_deadline() == 1.2  # the urgent later arrival drives slack
+    q.pop(1)
+    assert q.oldest_deadline() == q.min_deadline() == 1.2
+    q.pop(1)
+    assert q.oldest_deadline() == q.min_deadline() == math.inf
+
+
+# ------------------------------------------------------------------ batcher
+def test_batcher_bit_exact_with_direct_engine():
+    engine = _engine()
+    batcher = ContinuousBatcher(engine, batch_buckets=(1, 4, 8))
+    xs = _samples(13)
+    rids = [batcher.submit(xs[i]) for i in range(5)]
+    rids += batcher.submit_batch(xs[5:])
+    batcher.drain()
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.pop_result(rid).out, want[i])
+    assert batcher.outstanding == 0
+
+
+def test_batcher_bucket_accounting_matches_legacy_semantics():
+    """11 requests over (1,4,8) buckets: one full 8-launch plus a 3-group
+    padded to 4 -- the same split/pad arithmetic the legacy server had."""
+    engine = _engine()
+    batcher = ContinuousBatcher(engine, batch_buckets=(1, 4, 8))
+    batcher.submit_batch(_samples(11))
+    batcher.drain()
+    c = batcher.metrics.counters
+    assert c["flushes"] == 2 and c["padded_samples"] == 1
+    assert c["dispatched_samples"] == 12 and c["completed"] == 11
+    with pytest.raises(ValueError, match="largest bucket"):
+        batcher.bucket_for(9)
+
+
+def test_slo_slack_triggers_flush_with_fake_clock():
+    """Deadline-slack flushing, isolated from the idle-greedy rule: no
+    launch while slack exceeds the bucket's flush budget, launch the moment
+    it shrinks to one engine flush budget."""
+    engine = _engine()
+    batcher = ContinuousBatcher(
+        engine, batch_buckets=(1, 4), greedy_when_idle=False,
+        interval_s=0.010, safety=1.0)
+    assert batcher.budgets[1] == pytest.approx(0.010 * engine.plan(1).n_micro)
+    x = _samples(1)[0]
+    batcher.submit(x, deadline=1.0, now=0.0)
+    batcher.poll(now=0.5)  # slack 0.5 >> budget: keep batching
+    assert batcher.metrics.counters["flushes"] == 0
+    batcher.poll(now=0.995)  # slack 5ms <= 10ms budget: must leave now
+    assert batcher.metrics.counters["flushes"] == 1
+    batcher.drain()
+    np.testing.assert_array_equal(
+        batcher.results[0].out, np.asarray(engine(jnp.asarray(x[None])))[0])
+
+
+def test_urgent_later_arrival_triggers_deadline_flush():
+    """A tighter per-request deadline behind a no-deadline FIFO head must
+    still trigger the slack flush (min_deadline, not the head's)."""
+    engine = _engine()
+    batcher = ContinuousBatcher(
+        engine, batch_buckets=(1, 4), greedy_when_idle=False,
+        interval_s=0.010, safety=1.0, slo_s=None)
+    xs = _samples(2)
+    batcher.submit(xs[0], now=0.0)  # deadline inf (no default SLO)
+    batcher.submit(xs[1], deadline=1.0, now=0.1)  # urgent override
+    batcher.poll(now=0.5)
+    assert batcher.metrics.counters["flushes"] == 0
+    batcher.poll(now=0.995)  # urgent slack <= budget: whole backlog ships
+    assert batcher.metrics.counters["flushes"] == 1
+    assert batcher.queue.depth == 0
+
+
+def test_engine_server_shim_survives_backlogs_beyond_result_capacity():
+    """Regression: the shim's unbounded-backlog contract must extend to the
+    result store -- a giant flush must not evict its own oldest results
+    before popping them (AttributeError on r.t_submit)."""
+    import warnings
+
+    from repro.launch.serve import EngineServer
+
+    engine = _engine()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        server = EngineServer(engine, batch_buckets=(1, 4, 8))
+    # functional proof at a test-sized capacity: an 11-sample backlog with
+    # room for only one max bucket (8) of results works because flush
+    # resolves+pops each launch before the next (one launch never exceeds
+    # the max bucket, the per-cycle floor of the result store)
+    server._batcher.result_capacity = 8
+    rids = server.submit_batch(_samples(11))
+    done = {r.rid: r for r in server.flush()}
+    assert sorted(done) == rids == list(range(11))
+    want = np.asarray(engine(jnp.asarray(_samples(11))))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(done[rid].out, want[i])
+
+
+def test_result_store_is_bounded():
+    engine = _engine()
+    batcher = ContinuousBatcher(engine, batch_buckets=(1, 4),
+                                result_capacity=6)
+    rids = batcher.submit_batch(_samples(10))
+    batcher.drain()
+    assert len(batcher.results) == 6  # oldest four evicted, memory flat
+    assert [r for r in rids if r in batcher.results] == rids[4:]
+
+
+def test_full_bucket_flushes_even_with_slack():
+    engine = _engine()
+    batcher = ContinuousBatcher(
+        engine, batch_buckets=(1, 4), greedy_when_idle=False,
+        interval_s=10.0, slo_s=None)  # no deadline pressure at all
+    batcher.submit_batch(_samples(4), now=0.0)
+    batcher.poll(now=0.0)
+    assert batcher.metrics.counters["flushes"] == 1  # full burst ships
+
+
+def test_greedy_idle_flush_ships_partial_buckets():
+    engine = _engine()
+    batcher = ContinuousBatcher(engine, batch_buckets=(1, 8), interval_s=10.0)
+    batcher.submit(_samples(1)[0])
+    batcher.poll()  # pipeline idle: waiting buys nothing
+    assert batcher.metrics.counters["flushes"] == 1
+
+
+# ------------------------------------------------- schedule -> seconds bridge
+def test_calibrated_cycle_time_feeds_interval_seconds():
+    engine = _engine()
+    cache = ScheduleCache()
+    entry = calibrate_cycle_time(engine, batch=8, reps=1, cache=cache)
+    assert entry["s_per_cycle"] > 0
+    assert cache.get(cycle_time_key()) == entry
+    s = dataflow.interval_seconds(engine.schedule, cache=cache)
+    assert s == pytest.approx(
+        engine.schedule.steady_state_interval * entry["s_per_cycle"])
+    # no measurement in the cache: the nominal clock converts the cycles
+    nominal = dataflow.interval_seconds(engine.schedule, cache=ScheduleCache())
+    assert nominal == pytest.approx(
+        engine.schedule.steady_state_interval / dataflow.DEFAULT_CLOCK_HZ)
+
+
+# --------------------------------------------------------------------- pool
+def test_pool_single_device_dispatch_resolves_bit_exact():
+    engine = _engine()
+    pool = ReplicaPool(engine)
+    q = AdmissionQueue(InputSpec.from_graph(engine.graph))
+    q.admit_batch(_samples(8))
+    entries, xs = q.pop(8)
+    pending = pool.dispatch(xs, entries)
+    assert pool.total_inflight == 1 and not pool.idle
+    ys = pending.resolve()
+    assert pool.idle
+    np.testing.assert_array_equal(ys, np.asarray(engine(jnp.asarray(xs))))
+    assert pool.load() == {0: 1}
+
+
+def test_pool_spreads_load_across_replicas_multidevice():
+    """4 host devices: four max-bucket launches land one per replica
+    (least-loaded), results bit-exact with the single-device engine."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+        import numpy as np, jax, jax.numpy as jnp
+        from repro.core import lowering
+        from repro.core.engine import FusedEngine
+        from repro.core.ir import Node
+        from repro.serving import ContinuousBatcher
+
+        rng = np.random.default_rng(0)
+        dims, bits = (24, 16, 8), 2
+        g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+        for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+            w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+            g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        fin = lowering.finalize(
+            lowering.lower_to_mvu(g, mode="standard", weight_bits=4, act_bits=bits))
+        engine = FusedEngine(fin)
+        assert len(jax.local_devices()) == 4
+
+        batcher = ContinuousBatcher(engine, batch_buckets=(32,))
+        assert len(batcher.pool) == 4
+        xs = rng.integers(0, 4, (128, 24)).astype(np.int32)
+        rids = batcher.submit_batch(xs)
+        batcher.flush_all()   # 4 x 32 launches, dispatched before resolving
+        assert sorted(batcher.pool.load().values()) == [1, 1, 1, 1]
+        batcher.drain()
+        want = np.asarray(engine(jnp.asarray(xs)))
+        for i, rid in enumerate(rids):
+            np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+        print("OK")
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True, timeout=600,
+        env={**os.environ, "PYTHONPATH": os.path.join(REPO, "src")},
+    )
+    assert proc.returncode == 0, f"STDOUT:\n{proc.stdout}\nSTDERR:\n{proc.stderr}"
+    assert "OK" in proc.stdout
+
+
+# ------------------------------------------------------------------ metrics
+def test_metrics_snapshot_percentiles_and_padding():
+    m = ServingMetrics()
+    for ms in range(1, 101):
+        m.observe_latency(ms / 1e3, now=ms / 10.0)
+    m.count("padded_samples", 25)
+    m.count("dispatched_samples", 100)
+    snap = m.snapshot()
+    assert snap["completed"] == 100
+    assert snap["p50_ms"] == pytest.approx(50.5, rel=0.05)
+    assert snap["p99_ms"] == pytest.approx(99.01, rel=0.05)
+    assert snap["padding_overhead"] == pytest.approx(0.25)
+    assert snap["samples_per_s"] == pytest.approx(100 / 9.9)
+
+
+# ------------------------------------------------------- CI regression gate
+def _gate():
+    spec = importlib.util.spec_from_file_location(
+        "check_bench_regression",
+        os.path.join(REPO, "scripts", "check_bench_regression.py"))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def test_regression_gate_handles_lower_is_better_records():
+    gate = _gate()
+    base = {"bit_exact": True, "speedup": 1.05, "min_speedup": 1.0,
+            "lower_is_better": ["p99_vs_server"],
+            "p99_vs_server": 0.6, "max_p99_vs_server": 1.0}
+    ok = {"bit_exact": True, "speedup": 1.1, "p99_vs_server": 0.5}
+    assert gate.check_record("r", base, ok,
+                             max_regression=0.2, min_speedup=1.0) == []
+    # fresh p99 above the relative ceiling fails
+    bad = {**ok, "p99_vs_server": 0.8}
+    errs = gate.check_record("r", base, bad,
+                             max_regression=0.2, min_speedup=1.0)
+    assert len(errs) == 1 and "p99_vs_server" in errs[0]
+    # a committed baseline that breaks its own absolute claim fails
+    broken = {**base, "p99_vs_server": 1.3}
+    errs = gate.check_record("r", broken, {**ok, "p99_vs_server": 1.3},
+                             max_regression=0.2, min_speedup=1.0)
+    assert any("ceiling" in e for e in errs)
+    # the metric must exist on both sides
+    errs = gate.check_record("r", base, {"bit_exact": True, "speedup": 1.1},
+                             max_regression=0.2, min_speedup=1.0)
+    assert any("missing" in e for e in errs)
