@@ -1,11 +1,11 @@
 """Cache-tuned FusedEngine vs the heuristic-default engine, end to end.
 
-Two engines over the SAME lowered graph:
+Two ``repro.build`` runs over the SAME raw chain:
 
-  heuristic  ``FusedEngine(graph)``: every kernel schedule from the
+  heuristic  ``build(graph, tune="off")``: every kernel schedule from the
              one-shot ``choose_folding`` + ``to_tpu_blocks`` defaults
-  tuned      ``FusedEngine(graph, tune="cache")``: per-node schedules from
-             the committed autotune cache (``repro.configs.*.TUNED_SCHEDULES``)
+  tuned      ``build(graph, tune="cache")``: per-node schedules from the
+             committed autotune cache (``repro.configs.*.TUNED_SCHEDULES``)
              -- pure lookup, zero measurement at construction
 
 Both must be bit-exact with the eager ``dataflow.execute`` interpreter; the
@@ -28,46 +28,46 @@ import os
 import numpy as np
 
 from benchmarks.common import paired_times
-from benchmarks.conv_throughput import build_cnv_graph
-from benchmarks.engine_throughput import build_nid_graph
+from benchmarks.conv_throughput import cnv_accelerator
+from benchmarks.engine_throughput import nid_accelerator
 from repro.configs import cnv_bnn
-from repro.core import autotune, dataflow
-from repro.core.engine import FusedEngine
+from repro.core import autotune
 
 MIN_SPEEDUP = 1.15  # the committed-gain floor the CI gate enforces
 
 
-def build_graph(config: str, seed: int):
+def build_accelerator(config: str, seed: int, **overrides):
     if config == "nid_mlp":
-        return build_nid_graph(seed), "nid_mlp_600_64_64_64_1_2bit"
+        return nid_accelerator(seed, **overrides), "nid_mlp_600_64_64_64_1_2bit"
     spec = cnv_bnn.QUICK
-    graph = build_cnv_graph(spec, mode="xnor", seed=seed)
+    acc = cnv_accelerator(spec, mode="xnor", seed=seed, **overrides)
     name = f"cnv_bnn_{spec.image}px_{'x'.join(map(str, spec.channels))}"
-    return graph, name
+    return acc, name
 
 
 def run(*, config: str = "nid_mlp", batch: int = 4096, reps: int = 5,
         seed: int = 0, retune: bool = False,
         cache_out: str | None = None,
         out: str | None = "experiments/bench/autotune_gain.json") -> dict:
-    graph, name = build_graph(config, seed)
-    x = autotune.synth_input(graph, batch, seed=seed + 1)
+    heur_acc, name = build_accelerator(config, seed)
+    heuristic = heur_acc.engine
+    x = autotune.synth_input(heur_acc.ref_graph, batch, seed=seed + 1)
 
     if retune:
         cache = autotune.ScheduleCache()
         # fill per-node entries by measuring, then search the microbatch tile
-        FusedEngine(graph, tune="auto", cache=cache)
-        autotune.tune_engine(graph, batch, cache=cache)
+        build_accelerator(config, seed, tune="auto", cache=cache)
+        autotune.tune_engine(heur_acc.graph, batch, cache=cache)
         if cache_out:
             cache.save(cache_out)
             print(f"# saved {len(cache)} tuned entries -> {cache_out}")
     else:
         cache = autotune.default_cache()
 
-    heuristic = FusedEngine(graph)
-    tuned = FusedEngine(graph, tune="cache", cache=cache)
+    tuned_acc, _ = build_accelerator(config, seed, tune="cache", cache=cache)
+    tuned = tuned_acc.engine
 
-    want = np.asarray(dataflow.execute(graph, x))
+    want = np.asarray(heur_acc.interpret(x))
     got_h = np.asarray(heuristic(x))
     got_t = np.asarray(tuned(x))
     np.testing.assert_allclose(got_h, want, rtol=1e-5, atol=1e-5)

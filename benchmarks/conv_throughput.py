@@ -1,13 +1,14 @@
 """Fused streaming conv path vs the eager interpreter on the CNV topology.
 
-Two executions of the same lowered+finalized CNV graph (conv layers keep
-standalone batchnorm/quant_act nodes, the unfused form):
+One ``repro.build`` run of the CNV chain yields both executions (the
+reference graph keeps standalone batchnorm/quant_act nodes, the unfused
+form):
 
-  unfused   ``dataflow.execute``: one dispatch per node; every conv runs
+  unfused   ``acc.interpret``: one dispatch per node; every conv runs
             SWU-then-MVU with the full (B, OH*OW, Kd^2*C) im2col matrix
             materialized between them -- the buffering blow-up FINN's
             line-buffer SWU exists to avoid
-  fused     ``FusedEngine``: bn/quant folded into threshold epilogues,
+  fused     ``acc.engine``: bn/quant folded into threshold epilogues,
             swu+mvu pairs collapsed into the line-buffer conv kernel
             (``kernels.swu_mvu``), whole chain one jit'd microbatch stream
 
@@ -27,16 +28,21 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import paired_times
+from repro.build import Accelerator, build
 from repro.configs import cnv_bnn
-from repro.core import dataflow, ir, lowering
+from repro.core import ir
 from repro.core.engine import FusedEngine
 
 
-def build_cnv_graph(spec=cnv_bnn.QUICK, *, mode: str = "xnor", seed: int = 0):
-    g = cnv_bnn.build_graph(spec, seed=seed)
-    lowered = lowering.lower_to_mvu(
-        g, mode=mode, weight_bits=spec.weight_bits, act_bits=spec.act_bits)
-    return lowering.finalize(lowered)
+def cnv_accelerator(spec=cnv_bnn.QUICK, *, mode: str = "xnor", seed: int = 0,
+                    **overrides) -> Accelerator:
+    """The CNV dataflow build (heuristic per-layer folding, as the
+    committed baselines were measured)."""
+    kw = dict(target="engine", mode=mode, weight_bits=spec.weight_bits,
+              act_bits=spec.act_bits, folding="none",
+              name=f"cnv_bnn_{spec.image}px")
+    kw.update(overrides)
+    return build(cnv_bnn.build_graph(spec, seed=seed), **kw)
 
 
 def conv_memory_model(engine: FusedEngine, batch: int, microbatch: int) -> dict:
@@ -78,21 +84,21 @@ def run(*, batch: int = 256, reps: int = 5, seed: int = 0, mode: str = "xnor",
         out: str | None = "experiments/bench/conv_throughput.json") -> dict:
     if spec is None:
         spec = cnv_bnn.QUICK if quick else cnv_bnn.FULL
-    graph = build_cnv_graph(spec, mode=mode, seed=seed)
+    acc = cnv_accelerator(spec, mode=mode, seed=seed)
+    engine = acc.engine
     rng = np.random.default_rng(seed + 1)
     x = jnp.asarray(
         rng.integers(0, 2**spec.act_bits, (batch, spec.image, spec.image, 3)),
         jnp.int32)
 
-    engine = FusedEngine(graph)
     plan = engine.plan(batch)
 
-    want = np.asarray(dataflow.execute(graph, x))
+    want = np.asarray(acc.interpret(x))
     got = np.asarray(engine(x))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
     t_unfused, t_fused, speedup = paired_times(
-        lambda v: dataflow.execute(graph, v), engine, x, reps=reps)
+        lambda v: acc.interpret(v), engine, x, reps=reps)
 
     n_conv = sum(1 for n in engine.graph if n.op == "conv_mvu")
     record = {

@@ -1,12 +1,14 @@
 """Fused engine vs unfused interpreter throughput on the NID-MLP config.
 
-Builds the paper's Table 6 MLP (600-64-64-64-1, 2-bit activations) with the
-paper's PE/SIMD folding, *finalized but not streamlined* — so the graph
-keeps its standalone batchnorm/quant_act nodes.  That graph runs two ways:
+Builds the paper's Table 6 MLP (600-64-64-64-1, 2-bit activations) through
+the ``repro.build`` step pipeline with the paper's PE/SIMD folding.  The
+build keeps bn/quant as standalone nodes in the reference graph, so the
+same :class:`~repro.build.accelerator.Accelerator` exposes both sides of
+the comparison:
 
-  unfused   ``dataflow.execute``: eager Python loop, one dispatch per node,
-            float BN/quant epilogues between the MVU kernels
-  fused     ``FusedEngine``: epilogues folded into the MVU threshold
+  unfused   ``acc.interpret``: eager per-node interpreter, one dispatch
+            per node, float BN/quant epilogues between the MVU kernels
+  fused     ``acc.engine``: epilogues folded into the MVU threshold
             epilogue, whole chain jit-compiled once, microbatch streaming
             per the dataflow schedule (paper section 5.3 analog)
 
@@ -25,17 +27,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import paired_times
+from repro.build import Accelerator, build
 from repro.configs import nid_mlp
-from repro.core import dataflow, lowering
-from repro.core.engine import FusedEngine
 from repro.core.ir import Graph, Node
-from repro.core.mvu import MVUConfig
 
 
 def build_nid_graph(seed: int = 0) -> Graph:
-    """Table 6 MLP with random trained-like weights, lowered + finalized
-    (NOT streamlined — bn/quant stay as standalone nodes) and folded with
-    the paper's PE/SIMD choices."""
+    """Table 6 MLP as a RAW IR chain (linear + bn + quant_act with random
+    trained-like weights) -- ``repro.build.build`` does the lowering."""
     rng = np.random.default_rng(seed)
     dims = [k for (k, _, _, _) in nid_mlp.LAYERS] + [nid_mlp.LAYERS[-1][1]]
     g: Graph = [Node("input", "in", {"shape": (dims[0],), "bits": nid_mlp.INPUT_BITS})]
@@ -51,31 +50,35 @@ def build_nid_graph(seed: int = 0) -> Graph:
             }))
             g.append(Node("quant_act", f"act{i}",
                           {"bits": nid_mlp.INPUT_BITS, "act_scale": 1.0}))
-    lowered = lowering.lower_to_mvu(
-        g, mode="standard", weight_bits=8, act_bits=nid_mlp.INPUT_BITS)
-    fin = lowering.finalize(lowered)
-    for node, fold in zip([n for n in fin if n.op == "mvu"], nid_mlp.foldings()):
-        node.attrs["config"] = MVUConfig(
-            **{**node.attrs["config"].__dict__, "folding": fold})
-    return fin
+    return g
+
+
+def nid_accelerator(seed: int = 0, **overrides) -> Accelerator:
+    """The NID-MLP dataflow build every benchmark/example shares: the
+    paper's per-layer PE/SIMD folding, standard weight coding."""
+    kw = dict(target="engine", mode="standard", weight_bits=8,
+              act_bits=nid_mlp.INPUT_BITS, folding=nid_mlp.foldings(),
+              name="nid_mlp")
+    kw.update(overrides)
+    return build(build_nid_graph(seed), **kw)
 
 
 def run(*, batch: int = 4096, reps: int = 5, seed: int = 0,
         out: str | None = "experiments/bench/engine_throughput.json") -> dict:
-    graph = build_nid_graph(seed)
+    acc = nid_accelerator(seed)
+    engine = acc.engine
     rng = np.random.default_rng(seed + 1)
     x = jnp.asarray(
         rng.integers(0, 2**nid_mlp.INPUT_BITS, (batch, 600)), jnp.int32)
 
-    engine = FusedEngine(graph)
     plan = engine.plan(batch)
 
-    want = np.asarray(dataflow.execute(graph, x))
+    want = np.asarray(acc.interpret(x))
     got = np.asarray(engine(x))
     np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
 
     t_unfused, t_fused, speedup = paired_times(
-        lambda v: dataflow.execute(graph, v), engine, x, reps=reps)
+        lambda v: acc.interpret(v), engine, x, reps=reps)
 
     record = {
         "config": "nid_mlp_600_64_64_64_1_2bit",

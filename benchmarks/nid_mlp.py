@@ -59,9 +59,12 @@ def run(out=None):
 
 
 def accuracy_check(n_train: int = 4096, n_test: int = 1024, steps: int = 300):
-    """Train float MLP on synthetic NID data, streamline to 2-bit MVU graph,
-    compare integer-pipeline accuracy against the float model."""
-    from repro.core import dataflow, lowering
+    """Train float MLP on synthetic NID data, streamline to 2-bit MVU graph
+    through the ``repro.build`` pipeline (the QAT flow opts into the
+    ``streamline`` step by name), compare integer-pipeline accuracy against
+    the float model."""
+    import repro.build as rbuild
+    from repro.core import dataflow
     from repro.core.ir import Node
     from repro.data.nid import make_dataset
 
@@ -121,13 +124,16 @@ def accuracy_check(n_train: int = 4096, n_test: int = 1024, steps: int = 300):
                 "mean": jnp.zeros((n,)), "var": jnp.ones((n,)) - 1e-5,
             }))
             graph.append(Node("quant_act", f"act{i}", {"bits": 2, "act_scale": 1.0}))
-    lowered = lowering.lower_to_mvu(graph, mode="standard", weight_bits=8, act_bits=2)
-    stream = lowering.finalize(lowering.streamline(lowered))
-    folds = nid_mlp.foldings()
-    for node, fold in zip([n for n in stream if n.op == "mvu"], folds):
-        node.attrs["config"] = type(node.attrs["config"])(
-            **{**node.attrs["config"].__dict__, "folding": fold})
-    out = dataflow.execute(stream, jnp.asarray(x_test, jnp.int32))
+    # the streamlining flow: BN+quant fold into thresholds at lowering time
+    # (on float weights), so "streamline" replaces the engine targets'
+    # runtime fuse steps in the step list
+    acc = rbuild.build(
+        graph, target="interpret", mode="standard", weight_bits=8, act_bits=2,
+        folding=nid_mlp.foldings(), name="nid_mlp_qat",
+        steps=("validate", "lower", "streamline", "finalize", "fold",
+               "dataflow"))
+    stream = acc.graph
+    out = acc.interpret(jnp.asarray(x_test, jnp.int32))
     # final layer emits raw int32 accumulator (no thresholds on the head);
     # the integer acc must be scaled by the head's weight scale for sign.
     mvu_nodes = [n for n in stream if n.op == "mvu"]

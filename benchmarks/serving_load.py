@@ -36,10 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.engine_throughput import build_nid_graph
-from repro.core import autotune
-from repro.core.engine import FusedEngine
-from repro.serving import ContinuousBatcher, calibrate_cycle_time
+from benchmarks.engine_throughput import nid_accelerator
 
 POLL_SLEEP_S = 2e-4  # idle-loop tick for both drivers
 
@@ -67,7 +64,9 @@ def run_engine_server(engine, xs, arrivals, *, buckets, flush_period_s):
     t0 = time.perf_counter()
     next_flush = t0 + flush_period_s
     i = 0
-    while i < n or server._pending:
+    # O(1) queue-depth probe: the shim's _pending property rebuilds the
+    # full rid list per tick, which would tax only the legacy side's loop
+    while i < n or server._batcher.queue.depth:
         now = time.perf_counter()
         if i < n and now >= t0 + arrivals[i]:
             server.submit(xs[i])
@@ -89,13 +88,12 @@ def run_engine_server(engine, xs, arrivals, *, buckets, flush_period_s):
             "stats": dict(server.stats)}
 
 
-def run_continuous(engine, xs, arrivals, *, buckets, slo_s, cache):
+def run_continuous(acc, xs, arrivals, *, buckets, slo_s):
     """Open-loop drive of the serving subsystem: submit on arrival, poll
     continuously; the batcher decides every flush itself."""
     n = len(arrivals)
-    batcher = ContinuousBatcher(engine, batch_buckets=buckets, slo_s=slo_s,
-                                cache=cache,
-                                result_capacity=max(8192, n)).warmup()
+    batcher = acc.serve(batch_buckets=buckets, slo_s=slo_s,
+                        result_capacity=max(8192, n))
     t0 = time.perf_counter()
     i = 0
     while i < n or batcher.outstanding:
@@ -121,14 +119,14 @@ def run_continuous(engine, xs, arrivals, *, buckets, slo_s, cache):
             "snapshot": batcher.metrics.snapshot()}
 
 
-def run_closed_loop(engine, xs, *, buckets, total, continuous, cache=None):
+def run_closed_loop(acc, xs, *, buckets, total, continuous):
     """Fixed-concurrency (2 max-size bursts) saturation throughput."""
     cap = buckets[-1]
     n = len(xs)
     submitted = completed = 0
     if continuous:
-        batcher = ContinuousBatcher(engine, batch_buckets=buckets, cache=cache,
-                                    result_capacity=max(8192, total)).warmup()
+        batcher = acc.serve(batch_buckets=buckets,
+                            result_capacity=max(8192, total))
         t0 = time.perf_counter()
         while completed < total:
             while submitted < total and batcher.outstanding < 2 * cap:
@@ -138,7 +136,7 @@ def run_closed_loop(engine, xs, *, buckets, total, continuous, cache=None):
             completed += len(batcher.poll())
         batcher.drain()
     else:
-        server = _make_server(engine, buckets)
+        server = _make_server(acc.engine, buckets)
         server._batcher.warmup()
         t0 = time.perf_counter()
         while completed < total:
@@ -153,16 +151,17 @@ def run(*, requests: int = 1024, rounds: int = 3, rate_hz: float | None = None,
         slo_ms: float | None = None, seed: int = 0, load: float = 0.5,
         closed_total: int | None = None,
         out: str | None = "experiments/bench/serving_load.json") -> dict:
-    graph = build_nid_graph(seed)
-    engine = FusedEngine(graph)
     buckets = (1, 8, 32, 128)
+    # the serving-target build calibrates the realized cycle time into the
+    # accelerator's cache, so every batcher's flush budgets (and the
+    # arrival rate / SLO below) are in this machine's wall-clock units
+    acc = nid_accelerator(seed, target="serving",
+                          calibrate_batch=buckets[-1], calibrate_reps=3)
+    engine = acc.engine
     rng = np.random.default_rng(seed + 1)
     xs = rng.integers(0, 4, (requests, 600)).astype(np.int32)
 
-    # calibrate the realized cycle time so the batcher's flush budgets (and
-    # the arrival rate / SLO below) are in this machine's wall-clock units
-    cache = autotune.ScheduleCache()
-    cal = calibrate_cycle_time(engine, batch=buckets[-1], reps=3, cache=cache)
+    cal = acc.calibration
     t_exec = cal["measured_s"]  # one max-bucket engine call
     slo_s = (slo_ms / 1e3) if slo_ms is not None else max(8 * t_exec, 0.02)
     capacity_hz = buckets[-1] / t_exec
@@ -181,16 +180,15 @@ def run(*, requests: int = 1024, rounds: int = 3, rate_hz: float | None = None,
         server_runs.append(run_engine_server(
             engine, xs, arrivals, buckets=buckets, flush_period_s=slo_s))
         serving_runs.append(run_continuous(
-            engine, xs, arrivals, buckets=buckets, slo_s=slo_s, cache=cache))
+            acc, xs, arrivals, buckets=buckets, slo_s=slo_s))
 
     bit_exact = all(np.array_equal(sv["outs"], want)
                     and np.array_equal(se["outs"], want)
                     for sv, se in zip(serving_runs, server_runs))
     closed_total = closed_total if closed_total is not None else 4 * requests
-    closed_serving = run_closed_loop(engine, xs, buckets=buckets,
-                                     total=closed_total, continuous=True,
-                                     cache=cache)
-    closed_server = run_closed_loop(engine, xs, buckets=buckets,
+    closed_serving = run_closed_loop(acc, xs, buckets=buckets,
+                                     total=closed_total, continuous=True)
+    closed_server = run_closed_loop(acc, xs, buckets=buckets,
                                     total=closed_total, continuous=False)
 
     def pct(res, p):

@@ -1,10 +1,13 @@
 """CNV (the FINN BNN convnet) streaming through the fused dataflow engine.
 
-The conv quickstart: build the CNV topology (conv/conv/pool/.../dense),
-lower conv layers to SWU+MVU pairs, and let ``FusedEngine`` collapse them
-into line-buffer conv kernels -- the whole network runs as ONE jit'd
-microbatch stream, bit-exact with the eager behavioural interpreter, and
-the (B, OH*OW, Kd^2*C) im2col matrix never materializes.
+The conv quickstart, now one ``repro.build`` call: build the CNV topology
+(conv/conv/pool/.../dense), and let the step pipeline lower conv layers to
+SWU+MVU pairs, rate-balance the folding, collapse the pairs into
+line-buffer conv kernels, and compile the whole network as ONE jit'd
+microbatch stream -- every transform verified bit-exact against the eager
+behavioural interpreter, with the `(B, OH*OW, Kd^2*C)` im2col matrix never
+materializing.  The BuildReport (per-step timing, per-stage folding +
+resource estimates) lands in ``experiments/build/``.
 
 Run:  PYTHONPATH=src python examples/cnv_dataflow.py
 """
@@ -12,22 +15,28 @@ Run:  PYTHONPATH=src python examples/cnv_dataflow.py
 import numpy as np
 import jax.numpy as jnp
 
+from repro.build import build
 from repro.configs import cnv_bnn
-from repro.core import dataflow, lowering
-from repro.core.engine import FusedEngine
 
 
 def main():
     spec = cnv_bnn.QUICK  # 1/8-channel CNV on 16x16 inputs; FULL = the real one
-    graph = cnv_bnn.build_graph(spec, seed=0)
-    lowered = lowering.lower_to_mvu(
-        graph, mode="xnor", weight_bits=spec.weight_bits, act_bits=spec.act_bits)
-    fin = lowering.apply_folding(lowering.finalize(lowered))
-
-    engine = FusedEngine(fin)  # fuses bn/quant epilogues, then swu+mvu pairs
-    ops_left = [n.op for n in engine.graph]
-    print(f"[cnv] lowered ops: {ops_left}")
+    acc = build(
+        cnv_bnn.build_graph(spec, seed=0),
+        target="engine", mode="xnor",
+        weight_bits=spec.weight_bits, act_bits=spec.act_bits,
+        folding="balance", tune="cache",
+        name="cnv_quick", output_dir="experiments/build",
+    )
+    engine = acc.engine
+    print(f"[cnv] build steps: {' -> '.join(acc.report.step_names)}")
+    print(f"[cnv] verified steps: "
+          f"{[s.name for s in acc.report.steps if s.verified]}")
+    print(f"[cnv] lowered ops: {[n.op for n in engine.graph]}")
     print(f"[cnv] schedule: {engine.schedule.summary()}")
+    print(f"[cnv] per-stage folding: "
+          f"{[(n.name, n.pe, n.simd, n.cycles) for n in acc.report.nodes]}")
+    print(f"[cnv] build report -> {acc.report.path}")
 
     rng = np.random.default_rng(1)
     x = jnp.asarray(
@@ -38,9 +47,9 @@ def main():
           f"{plan.microbatch} image(s), II = {plan.interval_cycles} cycles")
 
     logits = np.asarray(engine(x))
-    want = np.asarray(dataflow.execute(fin, x))
+    want = np.asarray(acc.interpret(x))
     assert np.array_equal(logits, want), "engine diverged from interpreter"
-    print(f"[cnv] logits {logits.shape}, bit-exact with dataflow.execute")
+    print(f"[cnv] logits {logits.shape}, bit-exact with the reference interpreter")
     print(f"[cnv] predictions: {logits.argmax(-1)[:10]} ...")
     print("OK: CNV streamed through the fused conv path")
 

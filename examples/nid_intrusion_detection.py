@@ -4,16 +4,20 @@ End-to-end FINN flow on the Table 6 MLP (600-64-64-64-1, 2-bit):
 
   1. train the float MLP with quantization-aware STE on a synthetic
      UNSW-NB15 stand-in (offline container; same feature/label geometry),
-  2. lower linear layers to MVU nodes (FINN 'Lowering'),
-  3. streamline BN+quantizer into integer thresholds,
-  4. apply the paper's Table 6 PE/SIMD folding,
-  5. run integer inference through the Pallas MVU kernels and verify it
+  2. compile it through the ``repro.build`` step pipeline (lowering,
+     streamlining, the paper's Table 6 PE/SIMD folding, per-step
+     verification against the reference interpreter),
+  3. run integer inference through the Pallas MVU kernels and verify it
      matches the float teacher,
-  6. print the dataflow schedule: per-layer cycles reproduce Table 7.
+  4. print the dataflow schedule: per-layer cycles reproduce Table 7,
+  5. serve the fused engine through the continuous batcher, and write the
+     BuildReport JSON (the software analog of the paper's resource and
+     synthesis-time tables).
 
-Run:  PYTHONPATH=src python examples/nid_intrusion_detection.py
+Run:  PYTHONPATH=src python examples/nid_intrusion_detection.py [--fast]
 """
 
+import argparse
 import os
 import sys
 
@@ -25,7 +29,7 @@ from repro.core.folding import Folding
 from repro.core.resource_model import mvu_resources
 
 
-def main():
+def main(fast: bool = False):
     print("== NID MLP (paper Table 6): 600-64-64-64-1 @ 2-bit ==")
     for i, (k, n, pe, simd) in enumerate(nid_mlp.LAYERS):
         fold = Folding(pe, simd)
@@ -37,8 +41,8 @@ def main():
               f"| cycles {cycles} (paper RTL: {paper}) "
               f"| wmem_depth={res.weight_mem_depth} inbuf={res.input_buffer_depth}")
 
-    print("== train (QAT) -> streamline -> fold -> integer inference ==")
-    out = accuracy_check(steps=300)
+    print("== train (QAT) -> build(streamline steps) -> integer inference ==")
+    out = accuracy_check(steps=120 if fast else 300)
     print(f"  float teacher accuracy : {out['float_acc']:.3f}")
     print(f"  integer MVU accuracy   : {out['mvu_int_acc']:.3f}")
     print(f"  pipeline interval      : {out['pipeline_interval_cycles']} cycles "
@@ -47,29 +51,36 @@ def main():
     assert out["mvu_int_acc"] > 0.95, "integer pipeline must match the teacher"
     print("OK: end-to-end FINN flow reproduced on the NID use case")
 
-    print("== fused streaming engine + batched serving front-end ==")
+    print("== repro.build: one call replaces the manual lowering chain ==")
     import numpy as np
     import jax.numpy as jnp
 
-    from benchmarks.engine_throughput import build_nid_graph
-    from repro.core import dataflow
-    from repro.core.engine import FusedEngine
-    from repro.launch.serve import EngineServer
+    from benchmarks.engine_throughput import nid_accelerator
 
-    graph = build_nid_graph()
-    engine = FusedEngine(graph)
+    # target="serving" = the engine pipeline + measured cycle-time
+    # calibration; every step is verified bit-exact against the reference
+    # interpreter and the BuildReport lands next to the autotune cache.
+    acc = nid_accelerator(target="serving", output_dir="experiments/build")
+    engine = acc.engine
     plan = engine.plan(256)
     rng = np.random.default_rng(0)
     x = jnp.asarray(rng.integers(0, 4, (256, 600)), jnp.int32)
-    same = np.array_equal(np.asarray(engine(x)), np.asarray(dataflow.execute(graph, x)))
+    same = np.array_equal(np.asarray(engine(x)), np.asarray(acc.interpret(x)))
+    print(f"  build steps            : {' -> '.join(acc.report.step_names)}")
+    print(f"  verified steps         : "
+          f"{sum(1 for s in acc.report.steps if s.verified)} "
+          f"(bit-exact vs the reference interpreter, per transform)")
     print(f"  epilogues fused        : {sum(1 for n in engine.graph if n.attrs.get('fused'))} "
           f"bn+quant pairs -> MVU thresholds")
     print(f"  stream plan (B=256)    : {plan.n_micro} microbatches x {plan.microbatch} "
           f"(II {plan.interval_cycles} cycles)")
+    print(f"  build report           : {acc.report.path}")
     print(f"  bit-exact vs interpret : {same}")
     assert same
 
     import warnings
+
+    from repro.launch.serve import EngineServer
 
     with warnings.catch_warnings():
         warnings.simplefilter("ignore", DeprecationWarning)  # legacy shim
@@ -83,14 +94,8 @@ def main():
     assert ok
     print("OK: fused engine serves the NID workload bit-exactly")
 
-    print("== continuous-batching serving subsystem (repro.serving) ==")
-    from repro.core.autotune import ScheduleCache
-    from repro.serving import ContinuousBatcher, calibrate_cycle_time
-
-    cache = ScheduleCache()
-    cal = calibrate_cycle_time(engine, batch=32, cache=cache)
-    batcher = ContinuousBatcher(engine, batch_buckets=(1, 8, 32), slo_s=0.05,
-                                cache=cache)
+    print("== continuous-batching serving subsystem (Accelerator.serve) ==")
+    batcher = acc.serve(batch_buckets=(1, 8, 32), slo_s=0.05)
     rids = [batcher.submit(np.asarray(x[i])) for i in range(11)]
     batcher.drain()
     ok = all(np.array_equal(batcher.pop_result(r).out,
@@ -98,6 +103,7 @@ def main():
              for i, r in enumerate(rids))
     snap = batcher.metrics.snapshot()
     budget = batcher.budgets[batcher.bucket_for(1)]
+    cal = acc.calibration
     print(f"  admission queue         : bounded at {batcher.queue.capacity} "
           f"samples, validated against input spec {batcher.spec.shape}")
     ii = engine.schedule.steady_state_interval
@@ -114,4 +120,7 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--fast", action="store_true",
+                    help="fewer QAT steps (CI smoke)")
+    main(fast=ap.parse_args().fast)

@@ -4,6 +4,7 @@
 2. Run the Pallas kernels against the XLA reference (bit-exact).
 3. Fold a BatchNorm+quantizer into integer thresholds (streamlining).
 4. Use the FINN-style folding pass + resource model.
+5. Compile a whole MLP chain with the ``repro.build`` step pipeline.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -57,6 +58,27 @@ def main():
     fold = choose_folding(64, 600, target_cycles=16)
     print(f"  N=64 K=600 target 16 cycles -> PE={fold.pe} SIMD={fold.simd} "
           f"cycles={fold.cycles(64, 600)}")
+
+    print("== 5. the build pipeline (FINN build_dataflow analog) ==")
+    from repro.build import build, default_steps
+    from repro.core.ir import Node
+
+    rng = np.random.default_rng(0)
+    g = [Node("input", "in", {"shape": (64,), "bits": 2})]
+    for i, (kk, nn) in enumerate(((64, 32), (32, 8))):
+        g.append(Node("linear", f"fc{i}", {},
+                      {"w": jnp.asarray(rng.normal(0, 0.5, (nn, kk)),
+                                        jnp.float32)}))
+        if i == 0:
+            g.append(Node("quant_act", "act0", {"bits": 2, "act_scale": 1.0}))
+    acc = build(g, target="engine", mode="standard", weight_bits=4, act_bits=2)
+    xb = jnp.asarray(rng.integers(0, 4, (16, 64)), jnp.int32)
+    assert np.array_equal(np.asarray(acc(xb)), np.asarray(acc.interpret(xb)))
+    print(f"  default steps ('engine'): {' -> '.join(default_steps('engine'))}")
+    print(f"  verified transforms     : "
+          f"{[s.name for s in acc.report.steps if s.verified]}")
+    print(f"  schedule                : {acc.report.schedule}")
+    print("  engine == interpreter on a probe batch (verified per step)")
 
 
 if __name__ == "__main__":

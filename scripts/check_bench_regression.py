@@ -27,6 +27,11 @@ itself must sit at or under its own ``max_<key>`` ceiling when one is
 present (the serving claim: p99 strictly better than the legacy server,
 ``max_p99_vs_server: 1.0``) -- the exact mirror of the speedup rules.
 
+A fresh record carrying gated keys (``speedup``, ``bit_exact``, or any
+``lower_is_better`` metric) that the committed baseline lacks fails with a
+clear "regenerate the baseline" message -- a grown benchmark must never
+silently escape the gate.
+
 Absolute samples/s numbers from both runs are printed for the log but not
 gated.  Exits non-zero on the first failure so CI fails the build.
 """
@@ -42,6 +47,17 @@ import sys
 def check_record(name: str, base: dict, fresh: dict, *,
                  max_regression: float, min_speedup: float) -> list[str]:
     errors = []
+    # A fresh record gating on keys the committed baseline lacks means the
+    # benchmark grew a metric (or a lower_is_better list) that was never
+    # committed: fail with a pointer at the stale baseline instead of
+    # letting the new metric silently escape the gate (or KeyError later).
+    gated_fresh = {k for k in ("speedup", "bit_exact") if k in fresh}
+    gated_fresh.update(fresh.get("lower_is_better", ()))
+    stale = sorted(k for k in gated_fresh if k not in base)
+    if stale:
+        errors.append(
+            f"{name}: committed baseline lacks gated key(s) {stale} present "
+            f"in the fresh record -- regenerate and commit the baseline")
     if base.get("bit_exact") and not fresh.get("bit_exact"):
         errors.append(f"{name}: fused engine diverged from the interpreter")
     b_speed, f_speed = base.get("speedup"), fresh.get("speedup")

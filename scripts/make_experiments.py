@@ -350,21 +350,67 @@ def main():
     except ImportError:
         pass
 
+    # ----------------------------------------------------------- build reports
+    reports = sorted(glob.glob("experiments/build/*_build_report.json"))
+    if reports:
+        w("\n## Build pipeline (`repro.build`) — step reports\n")
+        w("Every accelerator is now produced by one "
+          "`repro.build.build(graph, target=...)` call running a FINN-style "
+          "list of named steps (lower → finalize → fold → fuse_epilogues → "
+          "fuse_swu → tune → dataflow → engine [→ calibrate]), each graph "
+          "rewrite verified bit-exact against the reference interpreter on "
+          "a probe batch. The BuildReport below is the software analog of "
+          "the paper's per-design resource/synthesis tables: per-step "
+          "wall-clock + verification, per-stage folding with LUT/FF/BRAM-"
+          "analog estimates, predicted vs measured steady-state interval, "
+          "and autotune cache accounting.\n")
+        for path in reports:
+            with open(path) as fh:
+                rep = json.load(fh)
+            w(f"\n### `{rep['name']}` (target `{rep['target']}`)\n")
+            w("| step | wall s | verified | graph ops after |")
+            w("|---|---|---|---|")
+            for s in rep["steps"]:
+                ops = ", ".join(f"{k}×{v}" for k, v in sorted(s["ops"].items()))
+                ver = {True: "bit-exact", None: "—"}.get(s["verified"], "FAIL")
+                w(f"| {s['name']} | {s['wall_s']:.3f} | {ver} | {ops} |")
+            if rep.get("nodes"):
+                w("\n| stage | op | N | K | PE | SIMD | cycles | LUT-analog B "
+                  "| BRAM-analog B | tuned |")
+                w("|---|---|---|---|---|---|---|---|---|---|")
+                for n in rep["nodes"]:
+                    w(f"| {n['name']} | {n['op']} | {n['n']} | {n['k']} "
+                      f"| {n['pe']} | {n['simd']} | {n['cycles']} "
+                      f"| {n['lut_bytes']} | {n['bram_bytes']} "
+                      f"| {'yes' if n['tuned'] else 'no'} |")
+            pred, meas = rep.get("predicted_interval_s"), rep.get("measured_interval_s")
+            line = (f"\nSteady-state interval: predicted "
+                    f"{pred * 1e6:.3f} µs (nominal 200 MHz)" if pred else "\n")
+            if meas:
+                line += (f", measured {meas * 1e6:.1f} µs "
+                         f"({rep['cycle_time_source']} cycle time)")
+            tune = rep.get("tune", {})
+            if tune.get("mode", "off") != "off":
+                line += (f"; autotune `{tune['mode']}`: "
+                         f"{tune.get('cache_hits', 0)} cache hits, "
+                         f"{tune.get('cache_misses', 0)} misses")
+            w(line + f". Total build wall-clock {rep['total_wall_s']:.2f} s.")
+
     # ----------------------------------------------------------- serving load
-    w("\n## Serving load — continuous batching vs submit/flush\n")
-    w("`repro.serving` fronts the fused engine with a bounded admission "
-      "queue, a continuous batcher (flush on bucket-fill / pipeline-idle / "
-      "deadline-slack, the budget derived from "
-      "`DataflowSchedule.steady_state_interval` via "
-      "`dataflow.interval_seconds` with the measured cycle time), and a "
-      "multi-replica pool (params `device_put` per device, least-loaded "
-      "async dispatch).  `python -m benchmarks.serving_load` drives it and "
-      "the legacy cadence-flushed `EngineServer` with the same open-loop "
-      "Poisson arrivals; the committed record is CI-gated on >=1.0x "
-      "throughput (`min_speedup`) AND strictly-better p99 "
-      "(`lower_is_better: p99_vs_server`, ceiling 1.0).\n")
     serve_path = "experiments/bench/serving_load.json"
     if os.path.exists(serve_path):
+        w("\n## Serving load — continuous batching vs submit/flush\n")
+        w("`repro.serving` fronts the fused engine with a bounded admission "
+          "queue, a continuous batcher (flush on bucket-fill / pipeline-idle "
+          "/ deadline-slack, the budget derived from "
+          "`DataflowSchedule.steady_state_interval` via "
+          "`dataflow.interval_seconds` with the measured cycle time), and a "
+          "multi-replica pool (params `device_put` per device, least-loaded "
+          "async dispatch).  `python -m benchmarks.serving_load` drives it "
+          "and the legacy cadence-flushed `EngineServer` with the same "
+          "open-loop Poisson arrivals; the committed record is CI-gated on "
+          ">=1.0x throughput (`min_speedup`) AND strictly-better p99 "
+          "(`lower_is_better: p99_vs_server`, ceiling 1.0).\n")
         with open(serve_path) as fh:
             sv = json.load(fh)
         w(f"Open-loop Poisson on `{sv['config']}` ({sv['requests']} requests "

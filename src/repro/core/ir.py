@@ -42,12 +42,62 @@ KNOWN_OPS = {
 }
 
 
+# ops that consume a spatial (H, W, C) activation; everything else takes
+# whatever its producer yields
+SPATIAL_OPS = ("conv", "swu", "conv_mvu", "maxpool")
+
+
+def _describe(i: int, node: Node) -> str:
+    return f"node {i} ({node.op} {node.name!r})"
+
+
 def validate_chain(graph: Graph) -> None:
-    if not graph or graph[0].op != "input":
-        raise ValueError("graph must start with an input node")
-    for node in graph:
+    """Structural validation with actionable errors.
+
+    Every failure names the offending node's index and op plus what the
+    chain expected of its producer/consumer, so a malformed graph fails at
+    build time with a pointer to the node -- not deep inside a transform
+    with a bare assert or an index error.
+    """
+    if not graph:
+        raise ValueError(
+            "empty graph: a dataflow chain must start with an 'input' node")
+    if graph[0].op != "input":
+        raise ValueError(
+            f"graph must start with an 'input' node, got "
+            f"{_describe(0, graph[0])}")
+    shape: tuple | None = None
+    prev: Node | None = None
+    for i, node in enumerate(graph):
         if node.op not in KNOWN_OPS:
-            raise ValueError(f"unknown op {node.op!r} ({node.name})")
+            raise ValueError(
+                f"{_describe(i, node)}: unknown op; known ops are "
+                f"{sorted(KNOWN_OPS)}")
+        if node.op == "input" and i > 0:
+            raise ValueError(
+                f"{_describe(i, node)}: 'input' is only legal at index 0 "
+                f"(producer here is {prev.op!r} {prev.name!r})")
+        if prev is not None and prev.op == "swu" and node.op != "mvu":
+            raise ValueError(
+                f"{_describe(i, node)}: a sliding-window unit must feed an "
+                f"'mvu' consumer (producer {prev.op!r} {prev.name!r} at "
+                f"index {i - 1} yields im2col windows)")
+        if node.op in SPATIAL_OPS and i > 0 and (shape is None or len(shape) != 3):
+            raise ValueError(
+                f"{_describe(i, node)}: needs a spatial (H, W, C) "
+                f"activation, but producer {prev.op!r} ({prev.name!r}, "
+                f"index {i - 1}) yields shape {shape}")
+        try:
+            shape = propagate(shape, node)
+        except KeyError as e:
+            raise ValueError(
+                f"{_describe(i, node)}: missing required attr/param "
+                f"{e.args[0]!r} for this op") from None
+        prev = node
+    if graph[-1].op == "swu":
+        raise ValueError(
+            f"{_describe(len(graph) - 1, graph[-1])}: a sliding-window unit "
+            f"cannot terminate the chain; expected an 'mvu' consumer")
 
 
 def propagate(shape: tuple, node: Node) -> tuple:

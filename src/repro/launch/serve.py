@@ -59,6 +59,23 @@ def shard_serve_fns(model: Model, mesh, batch: int, max_len: int,
     return prefill, decode, p_shard, s_shard
 
 
+# the shim warns once per process, not once per construction: a serving
+# loop that builds servers in a loop should not flood the log
+_ENGINE_SERVER_WARNED = False
+
+
+def _warn_engine_server_deprecated() -> None:
+    global _ENGINE_SERVER_WARNED
+    if _ENGINE_SERVER_WARNED:
+        return
+    _ENGINE_SERVER_WARNED = True
+    warnings.warn(
+        "EngineServer is deprecated; build an Accelerator with "
+        "repro.build.build(graph, target='serving') and use "
+        "Accelerator.serve() / repro.serving.ContinuousBatcher",
+        DeprecationWarning, stacklevel=3)
+
+
 @dataclasses.dataclass
 class EngineRequest:
     rid: int
@@ -78,17 +95,16 @@ class EngineServer:
     holds it, oversize backlogs split into max-bucket chunks, and samples
     are validated against the engine graph's input spec at ``submit`` (a
     malformed request fails there with a clear error, not inside the
-    flush-time stack).  New code should use
-    ``repro.serving.ContinuousBatcher`` (SLO-aware flushing, async
-    multi-replica dispatch, metrics) directly.
+    flush-time stack).  New code should build through
+    ``repro.build.build(graph, target="serving")`` and use
+    ``Accelerator.serve()`` / ``repro.serving.ContinuousBatcher``
+    (SLO-aware flushing, async multi-replica dispatch, metrics).
     """
 
     def __init__(self, engine, *, batch_buckets: tuple[int, ...] = (1, 8, 32, 128)):
         if not batch_buckets or any(b <= 0 for b in batch_buckets):
             raise ValueError(f"need positive bucket sizes, got {batch_buckets}")
-        warnings.warn(
-            "EngineServer is deprecated; use repro.serving.ContinuousBatcher",
-            DeprecationWarning, stacklevel=2)
+        _warn_engine_server_deprecated()
         from repro.serving import ContinuousBatcher
 
         self.engine = engine

@@ -1,0 +1,316 @@
+"""repro.build tests: golden default step order per target, custom-step
+injection/replacement, verification hooks naming the failing step,
+BuildReport JSON round-trip, the Accelerator facade, and the EngineServer
+shim's bit-exactness with ContinuousBatcher on one submit/flush trace."""
+
+import dataclasses
+import json
+import os
+import warnings
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.build import (
+    Accelerator,
+    BuildConfig,
+    BuildError,
+    BuildReport,
+    VerificationError,
+    build,
+    default_steps,
+)
+from repro.core.folding import Folding
+from repro.core.ir import Node
+
+
+def _mlp_graph(dims=(24, 16, 8), bits=2, seed=3):
+    rng = np.random.default_rng(seed)
+    g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("batchnorm", f"bn{i}", {}, {
+                "gamma": jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32)),
+                "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
+                "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+                "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
+            }))
+            g.append(Node("quant_act", f"act{i}", {"bits": bits, "act_scale": 1.0}))
+    return g
+
+
+def _conv_graph(bits=2, seed=11):
+    rng = np.random.default_rng(seed)
+    g = [Node("input", "in", {"shape": (8, 8, 3), "bits": bits})]
+    w = rng.normal(0, 0.5, (3, 3, 3, 6)).astype(np.float32)
+    g.append(Node("conv", "c0", {"kernel": 3, "stride": 1, "pad": 0},
+                  {"w": jnp.asarray(w)}))
+    g.append(Node("quant_act", "act0", {"bits": bits, "act_scale": 1.0}))
+    return g
+
+
+def _x(dims=(24,), bits=2, batch=13, seed=0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, 2**bits, (batch, *dims)), jnp.int32)
+
+
+# ----------------------------------------------------------- default steps
+def test_golden_default_step_order_per_target():
+    """The FINN ``build_dataflow_steps`` analog is part of the API contract:
+    pin the default lists so a reorder is a deliberate, visible change."""
+    assert default_steps("interpret") == [
+        "validate", "lower", "finalize", "fold", "dataflow"]
+    assert default_steps("engine") == [
+        "validate", "lower", "finalize", "fold", "fuse_epilogues",
+        "fuse_swu", "tune", "dataflow", "engine"]
+    assert default_steps("pipeline") == default_steps("engine")
+    assert default_steps("serving") == default_steps("engine") + ["calibrate"]
+    with pytest.raises(BuildError, match="unknown|target"):
+        default_steps("bitfile")
+    # executed step order matches the declared default
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2)
+    assert acc.report.step_names == default_steps("engine")
+
+
+def test_build_engine_bit_exact_and_verified_steps():
+    acc = build(_mlp_graph(), target="engine", mode="standard",
+                weight_bits=4, act_bits=2)
+    x = _x()
+    np.testing.assert_array_equal(np.asarray(acc(x)),
+                                  np.asarray(acc.interpret(x)))
+    by_name = {s.name: s for s in acc.report.steps}
+    # every graph rewrite from the first executable graph on is verified
+    for name in ("finalize", "fold", "fuse_epilogues", "fuse_swu", "engine"):
+        assert by_name[name].verified is True
+    # the reference graph keeps the unfused bn/quant chain
+    assert any(n.op == "batchnorm" for n in acc.ref_graph)
+    assert all(n.op not in ("batchnorm", "quant_act") for n in acc.graph)
+
+
+def test_interpret_target_has_no_engine():
+    acc = build(_mlp_graph(), target="interpret", mode="standard",
+                weight_bits=4, act_bits=2)
+    assert acc.report.step_names == default_steps("interpret")
+    x = _x()
+    np.testing.assert_array_equal(np.asarray(acc(x)),
+                                  np.asarray(acc.interpret(x)))
+    with pytest.raises(BuildError, match="engine"):
+        acc.engine
+
+
+def test_explicit_folding_overrides_are_applied_per_node():
+    folds = [Folding(8, 12), Folding(4, 16)]
+    acc = build(_mlp_graph(), target="interpret", mode="standard",
+                weight_bits=4, act_bits=2, folding=folds)
+    mvus = [n for n in acc.graph if n.op == "mvu"]
+    assert [n.attrs["config"].folding for n in mvus] == folds
+    with pytest.raises(BuildError, match="folding override"):
+        build(_mlp_graph(), target="interpret", mode="standard",
+              weight_bits=4, act_bits=2, folding=[Folding(8, 12)])
+
+
+def test_custom_step_injection_and_replacement():
+    """Steps splice by name or callable, exactly like FINN's custom step
+    lists; a custom step may mutate the state or return a graph."""
+    seen = {}
+
+    def audit_step(state):
+        seen["ops"] = [n.op for n in state.graph]
+
+    def rename_step(state):  # returns a graph -> replaces state.graph
+        g = list(state.graph)
+        g[0] = Node("input", "renamed_in", dict(g[0].attrs), dict(g[0].params))
+        return g
+
+    steps = default_steps("engine")
+    steps.insert(steps.index("fold"), audit_step)
+    steps.insert(steps.index("engine"), rename_step)
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2,
+                steps=steps)
+    assert seen["ops"][0] == "input" and "mvu" in seen["ops"]
+    assert acc.graph[0].name == "renamed_in"
+    assert acc.report.step_names == [
+        "validate", "lower", "finalize", "audit_step", "fold",
+        "fuse_epilogues", "fuse_swu", "tune", "dataflow", "rename_step",
+        "engine"]
+    x = _x()
+    np.testing.assert_array_equal(np.asarray(acc(x)),
+                                  np.asarray(acc.interpret(x)))
+    with pytest.raises(BuildError, match="unknown build step"):
+        build(_mlp_graph(), steps=["validate", "no_such_step"])
+
+
+def test_verification_hook_names_the_failing_step():
+    """A transform that changes the numbers must fail the build with the
+    step's name in the error (FINN's verification steps)."""
+
+    def corrupt_weights(state):
+        g = []
+        for n in state.graph:
+            if n.op == "mvu" and "mvu" in n.params:
+                p = n.params["mvu"]
+                bad = dataclasses.replace(p, weights=p.weights + 1) \
+                    if dataclasses.is_dataclass(p) else p
+                g.append(Node(n.op, n.name, dict(n.attrs), {"mvu": bad}))
+            else:
+                g.append(n)
+        return g
+
+    steps = default_steps("engine")
+    steps.insert(steps.index("fuse_epilogues"), corrupt_weights)
+    with pytest.raises(VerificationError, match="corrupt_weights") as ei:
+        build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2,
+              steps=steps)
+    assert ei.value.step == "corrupt_weights"
+    # verify="off" skips the hooks: the same corrupted build succeeds
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2,
+                steps=steps, verify="off")
+    assert all(s.verified is None for s in acc.report.steps)
+
+
+def test_conv_chain_builds_and_fuses_swu():
+    acc = build(_conv_graph(), target="engine", mode="standard",
+                weight_bits=4, act_bits=2, folding="none")
+    assert [n.op for n in acc.graph] == ["input", "conv_mvu"]
+    assert any(n.op == "swu" for n in acc.ref_graph)
+    rng = np.random.default_rng(5)
+    x = jnp.asarray(rng.integers(0, 4, (3, 8, 8, 3)), jnp.int32)
+    np.testing.assert_array_equal(np.asarray(acc(x)),
+                                  np.asarray(acc.interpret(x)))
+
+
+# ----------------------------------------------------------------- report
+def test_build_report_roundtrips_through_json(tmp_path):
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2,
+                folding=[Folding(8, 12), Folding(4, 16)])
+    rep = acc.report
+    assert rep.target == "engine"
+    assert [n.name for n in rep.nodes] == ["fc0.mvu", "fc1.mvu"]
+    assert [(n.pe, n.simd) for n in rep.nodes] == [(8, 12), (4, 16)]
+    assert rep.schedule["bottleneck"] in ("fc0.mvu", "fc1.mvu")
+    assert rep.predicted_interval_s == pytest.approx(
+        rep.schedule["interval_cycles"] / 200e6)
+    assert rep.total_wall_s > 0
+
+    path = acc.save_report(str(tmp_path / "r.json"))
+    loaded = BuildReport.load(path)
+    assert loaded.to_json() == rep.to_json()
+    assert loaded.step_names == rep.step_names
+    assert loaded.nodes == rep.nodes
+    # the file is plain JSON (committable next to the autotune cache)
+    with open(path) as f:
+        assert json.load(f)["name"] == "build"
+
+
+def test_output_dir_emits_report_json(tmp_path):
+    out = str(tmp_path / "build")
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2,
+                name="unit_mlp", output_dir=out)
+    path = os.path.join(out, "unit_mlp_build_report.json")
+    assert acc.report.path == path and os.path.exists(path)
+    assert BuildReport.load(path).name == "unit_mlp"
+
+
+def test_tune_cache_accounting_in_report():
+    from repro.core import autotune
+
+    graph = _mlp_graph()
+    cache = autotune.ScheduleCache()
+    acc = build(graph, mode="standard", weight_bits=4, act_bits=2,
+                tune="cache", cache=cache)
+    t = acc.report.tune
+    assert t["mode"] == "cache" and t["cache_hits"] == 0
+    assert t["cache_misses"] == 2  # both MVU stages missed the empty cache
+    # misses keep the heuristic schedule (pure lookup, nothing measured)
+    assert all(n.attrs["config"].blocks is None
+               for n in acc.graph if n.op == "mvu")
+
+
+def test_build_config_validation_and_snapshot():
+    with pytest.raises(BuildError, match="target"):
+        BuildConfig(target="asic")
+    with pytest.raises(BuildError, match="tune"):
+        BuildConfig(tune="sometimes")
+    with pytest.raises(BuildError, match="folding"):
+        BuildConfig(folding="maybe")
+    snap = BuildConfig(folding=[Folding(2, 4)], steps=["validate"],
+                       graph=[Node("input", "in", {"shape": (4,)})]).snapshot()
+    json.dumps(snap)  # must be JSON-safe
+    assert snap["folding"] == [[2, 4]] and snap["graph"] == "list"
+    # build(config) uses the embedded graph; build() without one fails
+    cfg = BuildConfig(graph=_mlp_graph(), target="interpret",
+                      weight_bits=4, act_bits=2, mode="standard")
+    acc = build(cfg)
+    assert isinstance(acc, Accelerator)
+    with pytest.raises(BuildError, match="graph"):
+        build(BuildConfig())
+
+
+# -------------------------------------------------- EngineServer shim parity
+def _trace(n=13, k=24, bits=2, seed=0):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2**bits, (n, k)).astype(np.int32)
+
+
+def test_engine_server_shim_matches_continuous_batcher_trace():
+    """Regression (deprecation contract): the shim and a manually-flushed
+    ContinuousBatcher must stay bit-exact on the SAME submit/flush trace --
+    same per-rid outputs, same flush/padding accounting."""
+    from repro.launch.serve import EngineServer
+
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2)
+    xs = _trace()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        server = EngineServer(acc.engine, batch_buckets=(1, 4, 8))
+    batcher = acc.serve(batch_buckets=(1, 4, 8), greedy_when_idle=False,
+                        warmup=False)
+
+    # identical trace on both: 5 singles, one 8-block, flush, 3 singles, flush
+    def drive(submit, submit_batch, flush):
+        rids = [submit(xs[i]) for i in range(5)]
+        rids += submit_batch(xs[5:13])
+        out = {r: o for r, o in flush()}
+        rids += [submit(xs[i]) for i in range(3)]
+        out.update({r: o for r, o in flush()})
+        return rids, out
+
+    s_rids, s_out = drive(
+        server.submit, server.submit_batch,
+        lambda: [(r.rid, r.out) for r in server.flush()])
+
+    def batcher_flush():
+        batcher.flush_all()
+        done = batcher.harvest(block=True)
+        return [(rid, batcher.pop_result(rid).out) for rid in done]
+
+    b_rids, b_out = drive(batcher.submit, batcher.submit_batch, batcher_flush)
+
+    assert s_rids == b_rids
+    want = np.asarray(acc.engine(jnp.asarray(np.concatenate([xs, xs[:3]]))))
+    for i, rid in enumerate(s_rids):
+        np.testing.assert_array_equal(s_out[rid], want[i])
+        np.testing.assert_array_equal(b_out[rid], want[i])
+    # same coalescing arithmetic on both sides of the shim
+    assert server.stats["flushes"] == batcher.metrics.counters["flushes"]
+    assert (server.stats["padded_samples"]
+            == batcher.metrics.counters["padded_samples"])
+
+
+def test_engine_server_warns_once_pointing_at_build():
+    import repro.launch.serve as serve_mod
+
+    acc = build(_mlp_graph(), mode="standard", weight_bits=4, act_bits=2)
+    serve_mod._ENGINE_SERVER_WARNED = False
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        serve_mod.EngineServer(acc.engine, batch_buckets=(1, 4))
+        serve_mod.EngineServer(acc.engine, batch_buckets=(1, 4))
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)
+           and "EngineServer" in str(x.message)]
+    assert len(dep) == 1  # a single warning per process, not per instance
+    assert "repro.build" in str(dep[0].message)
+    assert "serving" in str(dep[0].message)

@@ -1,0 +1,105 @@
+"""ir.validate_chain: every malformed-graph case fails with the offending
+node's index/op and what the chain expected -- not a bare assert or an
+index error from deep inside a transform."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import ir
+from repro.core.ir import Node
+
+
+def _input(shape=(8, 8, 3), bits=2):
+    return Node("input", "in", {"shape": shape, "bits": bits})
+
+
+def _conv(name="c0"):
+    w = jnp.asarray(np.zeros((3, 3, 3, 4), np.float32))
+    return Node("conv", name, {"kernel": 3, "stride": 1, "pad": 0}, {"w": w})
+
+
+def _linear(name="fc0", n=4, k=16):
+    return Node("linear", name, {}, {"w": jnp.zeros((n, k), jnp.float32)})
+
+
+def test_empty_graph():
+    with pytest.raises(ValueError, match="empty graph.*'input'"):
+        ir.validate_chain([])
+
+
+def test_head_must_be_input():
+    with pytest.raises(ValueError,
+                       match=r"must start with an 'input' node.*node 0 "
+                             r"\(conv 'c0'\)"):
+        ir.validate_chain([_conv()])
+
+
+def test_unknown_op_names_index_and_node():
+    g = [_input((16,)), Node("relu", "act0", {})]
+    with pytest.raises(ValueError, match=r"node 1 \(relu 'act0'\): unknown op"):
+        ir.validate_chain(g)
+
+
+def test_input_only_legal_at_head():
+    g = [_input((16,)), _linear(k=16), _input((16,))]
+    with pytest.raises(ValueError,
+                       match=r"node 2 \(input 'in'\).*only legal at index 0.*"
+                             r"'linear'"):
+        ir.validate_chain(g)
+
+
+def test_spatial_op_after_flat_producer():
+    g = [_input((8, 8, 3)), Node("flatten", "flat", {}),
+         Node("maxpool", "pool", {"size": 2})]
+    with pytest.raises(ValueError,
+                       match=r"node 2 \(maxpool 'pool'\).*spatial \(H, W, C\) "
+                             r"activation.*'flatten' \('flat', index 1\) "
+                             r"yields shape \(192,\)"):
+        ir.validate_chain(g)
+
+
+def test_conv_after_linear_producer():
+    g = [_input((16,)), _linear(k=16), _conv("c1")]
+    with pytest.raises(ValueError,
+                       match=r"node 2 \(conv 'c1'\).*producer 'linear'"):
+        ir.validate_chain(g)
+
+
+def test_swu_must_feed_mvu():
+    swu = Node("swu", "c0.swu", {"kernel": 3, "stride": 1, "pad": 0})
+    g = [_input(), swu, Node("batchnorm", "bn0", {}, {})]
+    with pytest.raises(ValueError,
+                       match=r"node 2 \(batchnorm 'bn0'\).*sliding-window "
+                             r"unit must feed an 'mvu'"):
+        ir.validate_chain(g)
+
+
+def test_swu_cannot_terminate_the_chain():
+    swu = Node("swu", "c0.swu", {"kernel": 3, "stride": 1, "pad": 0})
+    with pytest.raises(ValueError, match=r"node 1 \(swu 'c0.swu'\).*cannot "
+                                         r"terminate"):
+        ir.validate_chain([_input(), swu])
+
+
+def test_missing_param_or_attr_names_the_node():
+    """A node without its op's required param/attr must fail as a named
+    ValueError, not a bare KeyError from inside shape propagation."""
+    g = [_input((16,)), Node("linear", "fc0", {})]  # no weight param
+    with pytest.raises(ValueError,
+                       match=r"node 1 \(linear 'fc0'\): missing required "
+                             r"attr/param 'w'"):
+        ir.validate_chain(g)
+    g = [_input(), Node("conv", "c0", {}, {"w": jnp.zeros((3, 3, 3, 4))})]
+    with pytest.raises(ValueError,
+                       match=r"node 1 \(conv 'c0'\): missing required "
+                             r"attr/param 'kernel'"):
+        ir.validate_chain(g)
+
+
+def test_well_formed_chains_pass():
+    flat = [_input((16,)), _linear(k=16), Node("quant_act", "a", {"bits": 2})]
+    ir.validate_chain(flat)
+    spatial = [_input(), _conv(), Node("maxpool", "p", {"size": 2}),
+               Node("flatten", "flat", {}), _linear(n=4, k=36)]
+    ir.validate_chain(spatial)

@@ -386,3 +386,26 @@ def test_regression_gate_handles_lower_is_better_records():
     errs = gate.check_record("r", base, {"bit_exact": True, "speedup": 1.1},
                              max_regression=0.2, min_speedup=1.0)
     assert any("missing" in e for e in errs)
+
+
+def test_regression_gate_flags_baseline_missing_gated_keys():
+    """A fresh record gating on keys the committed baseline lacks (a grown
+    benchmark with a stale baseline) must fail with a clear message, not a
+    KeyError or a silently ungated metric."""
+    gate = _gate()
+    fresh = {"bit_exact": True, "speedup": 1.2,
+             "lower_is_better": ["p99_vs_server"], "p99_vs_server": 0.5}
+    # baseline predates the latency metric AND the speedup claim
+    base = {"bit_exact": True}
+    errs = gate.check_record("r", base, fresh,
+                             max_regression=0.2, min_speedup=1.0)
+    assert len(errs) == 1
+    assert "lacks gated key" in errs[0]
+    assert "p99_vs_server" in errs[0] and "speedup" in errs[0]
+    assert "regenerate" in errs[0]
+    # a fully-populated baseline stays clean
+    ok_base = {"bit_exact": True, "speedup": 1.1, "min_speedup": 1.0,
+               "lower_is_better": ["p99_vs_server"], "p99_vs_server": 0.6,
+               "max_p99_vs_server": 1.0}
+    assert gate.check_record("r", ok_base, fresh,
+                             max_regression=0.2, min_speedup=1.0) == []
