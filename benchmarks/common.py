@@ -90,6 +90,23 @@ def rtl_kernel_fn(mode: str, k: int, blocks: dict):
     return f
 
 
+def emit_json(record: dict, path: str | None = None) -> None:
+    """Write one benchmark record as pretty JSON (the committed-baseline /
+    regression-gate format; see scripts/check_bench_regression.py)."""
+    if not path:
+        return
+    import json
+    import os
+
+    d = os.path.dirname(path)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(path, "w") as f:
+        # default=float absorbs stray numpy scalars from cost analyses
+        json.dump(record, f, indent=2, sort_keys=True, default=float)
+        f.write("\n")
+
+
 def emit(rows: list[dict], path: str | None = None) -> None:
     if not rows:
         return

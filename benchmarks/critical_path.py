@@ -3,15 +3,18 @@
 On FPGA the critical path bounds the clock; a TPU's clock is fixed, so the
 direct analog is per-output latency under the folded schedule.  We report
 ns per MVU output from the cycle model (RTL side, II=1 at the v5e clock)
-and from XLA cost analysis at roofline speed (HLS side; note the XLA path
-always runs the *unfolded* datapath, so absolute ratios reflect folding
-discipline, not clock -- the paper-faithful claims validated here are the
-STRUCTURAL ones of Table 5):
+and from XLA cost analysis at roofline speed (HLS side; the XLA path always
+runs the *unfolded* datapath, so absolute ratios reflect folding
+discipline, not clock).  The paper-faithful claims validated here -- and
+checked into the record's ``claims`` -- are the STRUCTURAL ones of Table 5:
 
-  C3a: IFM/OFM channel sweeps leave the per-step delay unchanged
-       (control logic invariant) -> rtl min==max==mean across cfg1/cfg3.
-  C3b: delay grows with PE/SIMD (array size) -> rtl mean grows across
-       cfg5/cfg6.
+  C3a: IFM/OFM channel sweeps leave the per-step datapath unchanged
+       (control logic invariant) -> step_macs min == max across cfg1/cfg3.
+  C3b: delay grows with PE/SIMD (array size) -> per-step datapath width
+       and adder-tree depth grow across cfg5/cfg6.
+
+``run_quick`` writes the JSON record the regression gate pairs with the
+committed baseline; the rows feed EXPERIMENTS.md's interval-sweep figure.
 """
 
 from __future__ import annotations
@@ -20,63 +23,108 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import compile_probe, emit, hls_ref_fn
+from benchmarks.common import compile_probe, emit_json, hls_ref_fn
 from repro.configs.paper_sweeps import CONFIGURATIONS, SIMD_TYPES, expand, mvu_shape
-from repro.core.folding import Folding
 from repro.core.resource_model import CLOCK_HZ, HBM_BW, PEAK_INT8_OPS
+from repro.explore import clamp_folding
 from repro.kernels import packing
 
 
-def run(config_ids=(1, 3, 5, 6), out=None):
-    rows = []
+def _config_row(cid: int, st: str, probe: bool) -> dict:
+    sweep = CONFIGURATIONS[cid]["sweep"]
     m = 128
-    for cid in config_ids:
-        sweep = CONFIGURATIONS[cid]["sweep"]
-        for st in SIMD_TYPES:
-            rtl_ns, hls_ns, step_macs, depths = [], [], [], []
-            for params, value in expand(cid):
-                n, k, px = mvu_shape(params)
-                pe = min(params["pe"], n)
-                simd = min(params["simd"], k)
-                while n % pe:
-                    pe -= 1
-                while k % simd:
-                    simd -= 1
-                fold = Folding(pe, simd)
-                outputs = n * px
-                rtl = fold.cycles(n, k, px) / CLOCK_HZ * 1e9 / outputs
-                step_macs.append(pe * simd)  # datapath width: FPGA crit-path driver
-                depths.append(int(np.ceil(np.log2(max(simd, 2)))))  # adder-tree levels
+    rtl_ns, hls_ns, step_macs, depths = [], [], [], []
+    for params, _value in expand(cid):
+        n, k, px = mvu_shape(params)
+        fold = clamp_folding(n, k, params["pe"], params["simd"])
+        outputs = n * px
+        rtl_ns.append(fold.cycles(n, k, px) / CLOCK_HZ * 1e9 / outputs)
+        step_macs.append(fold.pe * fold.simd)  # datapath width: crit-path driver
+        depths.append(int(np.ceil(np.log2(max(fold.simd, 2)))))  # adder-tree levels
 
-                if st == "xnor":
-                    a_s = jax.ShapeDtypeStruct((m, packing.num_words(k)), jnp.uint32)
-                    w_s = jax.ShapeDtypeStruct((n, packing.num_words(k)), jnp.uint32)
-                else:
-                    a_s = jax.ShapeDtypeStruct((m, k), jnp.int8)
-                    w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
-                probe = compile_probe(hls_ref_fn(st, k), a_s, w_s)
-                t = max(probe["flops"] / PEAK_INT8_OPS, probe["bytes"] / HBM_BW)
-                hls = t * 1e9 / (m * n)
-                rtl_ns.append(rtl)
-                hls_ns.append(hls)
-            rows.append({
-                "config": f"cfg{cid}:{sweep}",
-                "simd_type": st,
-                # C3a/C3b: per-step datapath width (crit-path driver on FPGA)
-                "step_macs_min": min(step_macs),
-                "step_macs_max": max(step_macs),
-                "tree_depth_min": min(depths),
-                "tree_depth_max": max(depths),
-                "rtl_min_ns": round(min(rtl_ns), 4),
-                "rtl_max_ns": round(max(rtl_ns), 4),
-                "rtl_mean_ns": round(float(np.mean(rtl_ns)), 4),
-                "hls_min_ns": round(min(hls_ns), 4),
-                "hls_max_ns": round(max(hls_ns), 4),
-                "hls_mean_ns": round(float(np.mean(hls_ns)), 4),
-            })
-    emit(rows, out)
-    return rows
+        if probe:
+            if st == "xnor":
+                a_s = jax.ShapeDtypeStruct((m, packing.num_words(k)), jnp.uint32)
+                w_s = jax.ShapeDtypeStruct((n, packing.num_words(k)), jnp.uint32)
+            else:
+                a_s = jax.ShapeDtypeStruct((m, k), jnp.int8)
+                w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
+            p = compile_probe(hls_ref_fn(st, k), a_s, w_s)
+            t = max(p["flops"] / PEAK_INT8_OPS, p["bytes"] / HBM_BW)
+            hls_ns.append(t * 1e9 / (m * n))
+    row = {
+        "config": f"cfg{cid}:{sweep}",
+        "simd_type": st,
+        # C3a/C3b: per-step datapath width (crit-path driver on FPGA)
+        "step_macs_min": min(step_macs),
+        "step_macs_max": max(step_macs),
+        "tree_depth_min": min(depths),
+        "tree_depth_max": max(depths),
+        "rtl_min_ns": round(min(rtl_ns), 4),
+        "rtl_max_ns": round(max(rtl_ns), 4),
+        "rtl_mean_ns": round(float(np.mean(rtl_ns)), 4),
+    }
+    if hls_ns:
+        row.update(hls_min_ns=round(min(hls_ns), 4),
+                   hls_max_ns=round(max(hls_ns), 4),
+                   hls_mean_ns=round(float(np.mean(hls_ns)), 4))
+    return row
+
+
+def _claims(rows: list[dict]) -> dict:
+    by_cfg = {}
+    for r in rows:
+        by_cfg.setdefault(r["config"].split(":")[0], []).append(r)
+    claims = {}
+    # C3a: channel sweeps (cfg1/cfg3) keep the datapath constant
+    for cfg in ("cfg1", "cfg3"):
+        if cfg in by_cfg:
+            claims[f"{cfg}_step_invariant"] = all(
+                r["step_macs_min"] == r["step_macs_max"] for r in by_cfg[cfg])
+    # C3b: array sweeps (cfg5/cfg6) widen the datapath / deepen the tree
+    for cfg in ("cfg5", "cfg6"):
+        if cfg in by_cfg:
+            claims[f"{cfg}_step_grows"] = all(
+                r["step_macs_max"] > r["step_macs_min"] for r in by_cfg[cfg])
+    return claims
+
+
+def run(config_ids=(1, 3, 5, 6), simd_types=SIMD_TYPES, probe: bool = True,
+        quick: bool = False, out: str | None = None) -> dict:
+    rows = [_config_row(cid, st, probe)
+            for cid in config_ids for st in simd_types]
+    claims = _claims(rows)
+    record = {
+        "name": "critical_path",
+        "quick": quick,
+        "config_ids": list(config_ids),
+        "rows": rows,
+        "claims": claims,
+        "summary": f"{len(rows)} rows, "
+                   f"claims={'ok' if all(claims.values()) else 'FAIL'}",
+    }
+    if not all(claims.values()):
+        raise AssertionError(f"critical-path structural claims failed: {claims}")
+    emit_json(record, out)
+    return record
+
+
+def run_quick(out_dir: str | None = None) -> dict:
+    out = f"{out_dir}/critical_path.json" if out_dir else None
+    return run(config_ids=(1, 5), simd_types=("standard",), quick=True, out=out)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="experiments/bench/critical_path.json")
+    args = ap.parse_args()
+    rec = (run(config_ids=(1, 5), simd_types=("standard",), quick=True,
+               out=args.out) if args.quick else run(out=args.out))
+    print(f"# {rec['summary']}")
 
 
 if __name__ == "__main__":
-    run(out="experiments/bench/critical_path.csv")
+    main()

@@ -29,28 +29,13 @@ import numpy as np
 from benchmarks.common import paired_times
 from repro.build import Accelerator, build
 from repro.configs import nid_mlp
-from repro.core.ir import Graph, Node
+from repro.core.ir import Graph
 
 
+# the Table 6 chain definition moved to the config package so the
+# explorer and examples can build it without importing benchmarks
 def build_nid_graph(seed: int = 0) -> Graph:
-    """Table 6 MLP as a RAW IR chain (linear + bn + quant_act with random
-    trained-like weights) -- ``repro.build.build`` does the lowering."""
-    rng = np.random.default_rng(seed)
-    dims = [k for (k, _, _, _) in nid_mlp.LAYERS] + [nid_mlp.LAYERS[-1][1]]
-    g: Graph = [Node("input", "in", {"shape": (dims[0],), "bits": nid_mlp.INPUT_BITS})]
-    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
-        w = (rng.normal(0, 1, (n, k)) / np.sqrt(k)).astype(np.float32)
-        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
-        if i < len(dims) - 2:
-            g.append(Node("batchnorm", f"bn{i}", {}, {
-                "gamma": jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32)),
-                "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
-                "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
-                "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
-            }))
-            g.append(Node("quant_act", f"act{i}",
-                          {"bits": nid_mlp.INPUT_BITS, "act_scale": 1.0}))
-    return g
+    return nid_mlp.build_graph(seed)
 
 
 def nid_accelerator(seed: int = 0, **overrides) -> Accelerator:

@@ -150,6 +150,32 @@ def accuracy_check(n_train: int = 4096, n_test: int = 1024, steps: int = 300):
     }
 
 
+def run_quick(out_dir: str | None = None) -> dict:
+    """One JSON record: Table 7 cycle parity + the QAT accuracy check."""
+    from benchmarks.common import emit_json
+
+    rows = run(out=None)
+    acc = accuracy_check(steps=200)
+    claims = {
+        "cycles_match_paper": all(
+            r["exec_cycles_model"] == r["exec_cycles_paper_rtl"] for r in rows),
+        "int_acc_tracks_float": acc["mvu_int_acc"] >= acc["float_acc"] - 0.05,
+    }
+    record = {
+        "name": "nid_mlp",
+        "layers": rows,
+        "accuracy": acc,
+        "claims": claims,
+        "summary": f"cycles {'==' if claims['cycles_match_paper'] else '!='} "
+                   f"paper; float={acc['float_acc']:.3f} "
+                   f"int={acc['mvu_int_acc']:.3f}",
+    }
+    if not all(claims.values()):
+        raise AssertionError(f"NID-MLP claims failed: {claims}")
+    if out_dir:
+        emit_json(record, f"{out_dir}/nid_mlp.json")
+    return record
+
+
 if __name__ == "__main__":
-    run(out="experiments/bench/nid_mlp.csv")
-    print(accuracy_check())
+    print(run_quick(out_dir="experiments/bench"))

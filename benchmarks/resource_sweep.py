@@ -1,93 +1,157 @@
-"""Paper Figs 8-13 + Table 4 + Fig 15: resource utilization & latency vs
-layer/implementation parameters, RTL(Pallas, closed-form) vs HLS(XLA,
-measured).
+"""Paper Figs 8-13 + Table 4 + Fig 15: resource utilization vs layer /
+implementation parameters, RTL(Pallas, closed-form) vs HLS(XLA, measured).
 
-Columns:
-  rtl_lut/ff/bram_bytes : analytical model (DESIGN.md metric mapping)
-  rtl_cycles            : folding cycle model (II=1)
-  hls_temp/arg_bytes    : XLA memory_analysis of the compiled reference
-  hls_compile_s         : XLA compile wall-clock (synthesis-time analog)
-  hls_flops/bytes       : XLA cost_analysis
+Three record sections, all rendered into EXPERIMENTS.md by
+``scripts/make_experiments.py``:
+
+  configs        one row per (Table 2 configuration value, SIMD type):
+                 analytic LUT/FF/BRAM analogs + cycle model next to the
+                 XLA compile probe of the reference at the same shape
+  folding_curve  resources vs the PE*SIMD datapath product at one fixed
+                 layer, realized through ``repro.explore``'s sweep grid --
+                 the x-axis of the paper's Figs 8-13 resource curves
+  large          Table 3/4's bigger designs (PE = SIMD = 16)
+
+Structural claims checked into the record (``claims``): BRAM analog stays
+flat under folding (weights don't move), the LUT analog grows with the
+datapath, cycles shrink as folding widens.  ``run_quick`` writes the JSON
+record the regression gate pairs with the committed baseline.
 """
 
 from __future__ import annotations
 
-from benchmarks.common import compile_probe, emit, hls_ref_fn
-from repro.configs.paper_sweeps import (
-    CONFIGURATIONS, LARGE_CONFIGS, SIMD_TYPES, expand, mvu_shape,
-)
-from repro.core.folding import Folding
-from repro.core.resource_model import mvu_resources
-from repro.kernels import packing
-
 import jax
 import jax.numpy as jnp
 
+from benchmarks.common import compile_probe, emit_json, hls_ref_fn
+from repro.configs.paper_sweeps import (
+    CONFIGURATIONS, LARGE_CONFIGS, SIMD_TYPES, expand, mvu_shape,
+)
+from repro.core.resource_model import mvu_resources
+from repro.explore import LayerShape, clamp_folding, sweep_grid
+from repro.kernels import packing
 
-def _row(c: dict, simd_type: str, sweep: str, value) -> dict:
+
+def _row(c: dict, simd_type: str, sweep: str, value, probe: bool = True) -> dict:
     n, k, px = mvu_shape(c)
-    pe = min(c["pe"], n)
-    simd = min(c["simd"], k)
-    # legality: clamp to divisors (paper keeps PE|N, SIMD|K by construction)
-    while n % pe:
-        pe -= 1
-    while k % simd:
-        simd -= 1
-    fold = Folding(pe, simd)
+    fold = clamp_folding(n, k, c["pe"], c["simd"])
     wb = 1 if simd_type in ("xnor", "binary") else 4
     ab = 1 if simd_type == "xnor" else 4
     res = mvu_resources(n, k, fold, mode=simd_type, weight_bits=wb,
                         act_bits=ab, n_pixels=px, n_thresh=2**ab - 1)
-
-    # HLS analog: compile the XLA reference at the MVU's working shape
-    m = 128  # pixel tile fed per stream burst
-    if simd_type == "xnor":
-        a_s = jax.ShapeDtypeStruct((m, packing.num_words(k)), jnp.uint32)
-        w_s = jax.ShapeDtypeStruct((n, packing.num_words(k)), jnp.uint32)
-    else:
-        a_s = jax.ShapeDtypeStruct((m, k), jnp.int8)
-        w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
-    probe = compile_probe(hls_ref_fn(simd_type, k), a_s, w_s)
-
-    return {
+    row = {
         "sweep": sweep,
         "value": value,
         "simd_type": simd_type,
-        "N": n, "K": k, "pixels": px, "PE": pe, "SIMD": simd,
+        "N": n, "K": k, "pixels": px, "PE": fold.pe, "SIMD": fold.simd,
         "rtl_lut_bytes": res.lut_bytes,
         "rtl_ff_bytes": res.ff_bytes,
         "rtl_bram_bytes": res.bram_bytes,
         "rtl_cycles": res.cycles,
         "rtl_wmem_depth": res.weight_mem_depth,
         "rtl_inbuf_depth": res.input_buffer_depth,
-        "hls_temp_bytes": probe["temp_bytes"],
-        "hls_arg_bytes": probe["arg_bytes"],
-        "hls_compile_s": round(probe["total_s"], 4),
-        "hls_flops": probe["flops"],
-        "hls_bytes": probe["bytes"],
+    }
+    if probe:
+        # HLS analog: compile the XLA reference at the MVU's working shape
+        m = 128  # pixel tile fed per stream burst
+        if simd_type == "xnor":
+            a_s = jax.ShapeDtypeStruct((m, packing.num_words(k)), jnp.uint32)
+            w_s = jax.ShapeDtypeStruct((n, packing.num_words(k)), jnp.uint32)
+        else:
+            a_s = jax.ShapeDtypeStruct((m, k), jnp.int8)
+            w_s = jax.ShapeDtypeStruct((n, k), jnp.int8)
+        p = compile_probe(hls_ref_fn(simd_type, k), a_s, w_s)
+        row.update(hls_temp_bytes=p["temp_bytes"], hls_arg_bytes=p["arg_bytes"],
+                   hls_compile_s=round(p["total_s"], 4),
+                   hls_flops=p["flops"], hls_bytes=p["bytes"])
+    return row
+
+
+def folding_curve(n: int = 64, k: int = 1024, px: int = 25,
+                  mode: str = "standard") -> list[dict]:
+    """Resources vs PE*SIMD at one fixed layer, points realized by the
+    explorer's sweep grid (same clamping the end-to-end sweep uses)."""
+    shape = LayerShape("mvu", n, k, px)
+    rows = []
+    for pt in sweep_grid([shape]):
+        fold = pt.foldings[0]
+        res = mvu_resources(n, k, fold, mode=mode, weight_bits=4, act_bits=4,
+                            n_pixels=px, n_thresh=15)
+        rows.append({
+            "point_id": pt.point_id, "PE": fold.pe, "SIMD": fold.simd,
+            "pe_simd": fold.pe * fold.simd,
+            "rtl_lut_bytes": res.lut_bytes, "rtl_ff_bytes": res.ff_bytes,
+            "rtl_bram_bytes": res.bram_bytes, "rtl_cycles": res.cycles,
+        })
+    return rows
+
+
+def _claims(curve: list[dict]) -> dict:
+    lo = min(curve, key=lambda r: r["pe_simd"])
+    hi = max(curve, key=lambda r: r["pe_simd"])
+    return {
+        # weights don't move under time-multiplexing: Fig 10/13's flat BRAM
+        "bram_flat_under_folding": len(
+            {r["rtl_bram_bytes"] for r in curve}) == 1,
+        # the datapath (LUT analog) and state (FF analog) grow with PE*SIMD
+        "lut_grows_with_datapath": hi["rtl_lut_bytes"] > lo["rtl_lut_bytes"],
+        "ff_grows_with_datapath": hi["rtl_ff_bytes"] > lo["rtl_ff_bytes"],
+        # cycles fall as the folding widens (Eq. 1: NF*SF shrink)
+        "cycles_shrink_with_folding": hi["rtl_cycles"] < lo["rtl_cycles"],
     }
 
 
-def run(config_ids=(1, 3, 5, 6), simd_types=SIMD_TYPES, out=None) -> list[dict]:
-    rows = []
+def run(config_ids=(1, 3, 5, 6), simd_types=SIMD_TYPES, probe: bool = True,
+        quick: bool = False, out: str | None = None) -> dict:
+    configs = []
     for cid in config_ids:
         sweep = CONFIGURATIONS[cid]["sweep"]
         for params, value in expand(cid):
             for st in simd_types:
-                rows.append(_row(params, st, f"cfg{cid}:{sweep}", value))
-    emit(rows, out)
-    return rows
+                configs.append(_row(params, st, f"cfg{cid}:{sweep}", value,
+                                    probe=probe))
+    large = [_row(c, "standard", "table3:ifm_ch", c["ifm_ch"], probe=probe)
+             for c in LARGE_CONFIGS]
+    curve = folding_curve()
+    claims = _claims(curve)
+    record = {
+        "name": "resource_sweep",
+        "quick": quick,
+        "config_ids": list(config_ids),
+        "configs": configs,
+        "large": large,
+        "folding_curve": curve,
+        "claims": claims,
+        "summary": f"{len(configs)} config rows, "
+                   f"{len(curve)}-point folding curve, "
+                   f"claims={'ok' if all(claims.values()) else 'FAIL'}",
+    }
+    if not all(claims.values()):
+        raise AssertionError(f"resource-sweep structural claims failed: {claims}")
+    emit_json(record, out)
+    return record
 
 
-def run_large(out=None) -> list[dict]:
-    """Table 3/4: large designs (PE=SIMD=16), increasing IFM channels."""
-    rows = []
-    for i, c in enumerate(LARGE_CONFIGS):
-        rows.append(_row(c, "standard", "table3:ifm_ch", c["ifm_ch"]))
-    emit(rows, out)
-    return rows
+def run_quick(out_dir: str | None = None) -> dict:
+    out = f"{out_dir}/resource_sweep.json" if out_dir else None
+    return run(config_ids=(1, 5), simd_types=("xnor", "standard"),
+               quick=True, out=out)
+
+
+def main() -> None:
+    import argparse
+
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="experiments/bench/resource_sweep.json")
+    args = ap.parse_args()
+    if args.quick:
+        rec = run(config_ids=(1, 5), simd_types=("xnor", "standard"),
+                  quick=True, out=args.out)
+    else:
+        rec = run(out=args.out)
+    print(f"# {rec['summary']}")
 
 
 if __name__ == "__main__":
-    run(out="experiments/bench/resource_sweep.csv")
-    run_large(out="experiments/bench/resource_large.csv")
+    main()

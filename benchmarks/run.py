@@ -1,138 +1,67 @@
-"""Benchmark orchestrator -- one function per paper table/figure.
+"""Benchmark orchestrator: discovers and runs every paper-figure benchmark.
 
-Prints ``name,us_per_call,derived`` CSV rows (plus the per-table CSVs under
-experiments/bench/).  Timings are CPU wall-clock of the XLA path; derived
-columns carry the paper-metric analogs (see each module's docstring).
+Any module in ``benchmarks/`` exposing ``run_quick(out_dir=None) -> dict``
+is discovered (``pkgutil``) and run; each returns a JSON-serializable
+record with a ``summary`` line and, when ``--out-dir`` is given, writes
+its record there (the fresh side of ``scripts/check_bench_regression.py``).
+
+    python -m benchmarks.run                      # print-only smoke
+    python -m benchmarks.run --out-dir /tmp/bench # CI: fresh gate records
+    python -m benchmarks.run --only resource_sweep
+
+The throughput benchmarks (engine/conv/autotune/serving) keep their own
+CLIs -- they need --quick batch shaping -- and are NOT discovered here;
+CI runs them as separate steps.
 """
 
 from __future__ import annotations
 
+import argparse
+import importlib
+import pkgutil
 import time
 
-import jax
-import numpy as np
+import benchmarks
 
 
-def _kernel_microbench() -> list[tuple[str, float, str]]:
-    """us/call of the three MVU datapaths, Pallas(interpret) vs XLA, small shape."""
-    from benchmarks.common import hls_ref_fn, make_operands, rtl_kernel_fn, time_call
-
-    rows = []
-    m, n, k = 128, 64, 1024
-    for mode in ("xnor", "binary", "standard"):
-        a, w = make_operands(mode, m, n, k)
-        blocks = dict(block_m=128, block_n=32, block_k=128, block_kw=8)
-        if mode == "xnor":
-            blocks.pop("block_k")
-        else:
-            blocks.pop("block_kw")
-        f_rtl = jax.jit(rtl_kernel_fn(mode, k, blocks))
-        f_hls = jax.jit(hls_ref_fn(mode, k))
-        t_rtl = time_call(f_rtl, a, w)
-        t_hls = time_call(f_hls, a, w)
-        macs = m * n * k
-        rows.append((f"kernel_{mode}_pallas_interpret", t_rtl * 1e6,
-                     f"gmacs={macs/t_rtl/1e9:.2f}"))
-        rows.append((f"kernel_{mode}_xla", t_hls * 1e6,
-                     f"gmacs={macs/t_hls/1e9:.2f}"))
-    return rows
+def discover() -> list:
+    """Modules under ``benchmarks/`` exposing ``run_quick``, sorted by name."""
+    mods = []
+    for info in pkgutil.iter_modules(benchmarks.__path__):
+        if info.name in ("run", "common"):
+            continue
+        mod = importlib.import_module(f"benchmarks.{info.name}")
+        if hasattr(mod, "run_quick"):
+            mods.append(mod)
+    return sorted(mods, key=lambda m: m.__name__)
 
 
-def main() -> None:
+def main(argv: list[str] | None = None) -> list[dict]:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default=None,
+                    help="write each record as <out-dir>/<name>.json")
+    ap.add_argument("--only", default=None,
+                    help="run a single benchmark module by name")
+    args = ap.parse_args(argv)
+
+    mods = discover()
+    if args.only:
+        mods = [m for m in mods if m.__name__.split(".")[-1] == args.only]
+        if not mods:
+            raise SystemExit(f"no benchmark module named {args.only!r} "
+                             f"exposes run_quick()")
     t_all = time.time()
-    out: list[tuple[str, float, str]] = []
-
-    print("name,us_per_call,derived")
-
-    def emit(name, us, derived):
-        print(f"{name},{us:.1f},{derived}", flush=True)
-        out.append((name, us, derived))
-
-    # kernel microbenchmarks (table-agnostic sanity row)
-    for name, us, derived in _kernel_microbench():
-        emit(name, us, derived)
-
-    # Figs 8-13 + Fig 15 (resource sweeps)
-    from benchmarks import resource_sweep
-
-    t0 = time.time()
-    rows = resource_sweep.run(config_ids=(1, 3, 5, 6),
-                              out="experiments/bench/resource_sweep.csv")
-    for r in rows[:0]:
-        pass
-    # headline: does RTL beat HLS for small designs & converge for large?
-    small = [r for r in rows if r["PE"] * r["SIMD"] <= 16]
-    large = [r for r in rows if r["PE"] * r["SIMD"] >= 1024]
-    ratio_small = np.mean([r["hls_temp_bytes"] / max(r["rtl_lut_bytes"], 1) for r in small])
-    ratio_large = np.mean([r["hls_temp_bytes"] / max(r["rtl_lut_bytes"], 1) for r in large])
-    emit("fig8_13_resource_sweep", (time.time() - t0) * 1e6,
-         f"hls/rtl_small={ratio_small:.2f};hls/rtl_large={ratio_large:.2f};rows={len(rows)}")
-
-    t0 = time.time()
-    rows = resource_sweep.run_large(out="experiments/bench/resource_large.csv")
-    emit("table4_large_convergence", (time.time() - t0) * 1e6,
-         ";".join(f"ifm{r['value']}:rtl={r['rtl_lut_bytes']}b" for r in rows))
-
-    # Fig 14 heat map
-    from benchmarks import heatmap
-
-    t0 = time.time()
-    rows = heatmap.run(pes=(2, 8, 32), simds=(2, 8, 32),
-                       out="experiments/bench/heatmap.csv")
-    emit("fig14_heatmap", (time.time() - t0) * 1e6, f"cells={len(rows)}")
-
-    # Table 5 critical path
-    from benchmarks import critical_path
-
-    t0 = time.time()
-    rows = critical_path.run(config_ids=(1, 5), out="experiments/bench/critical_path.csv")
-    mean_ratio = np.mean([r["hls_mean_ns"] / max(r["rtl_mean_ns"], 1e-9) for r in rows])
-    emit("table5_critical_path", (time.time() - t0) * 1e6,
-         f"hls/rtl_mean_ns_ratio={mean_ratio:.2f}")
-
-    # Fig 16 synthesis time: monolithic design-graph compile vs modular kernels
-    from benchmarks import synthesis_time
-
-    t0 = time.time()
-    rows = synthesis_time.run_chain(out="experiments/bench/synthesis_time_chain.csv")
-    first, last = rows[0], rows[-1]
-    emit("fig16_synthesis_time_chain", (time.time() - t0) * 1e6,
-         f"hls_L{first['value']}={first['hls_compile_s']}s;"
-         f"hls_L{last['value']}={last['hls_compile_s']}s;"
-         f"rtl_flat={last['rtl_compile_s']}s;hls/rtl_L{last['value']}={last['hls/rtl']}")
-    t0 = time.time()
-    synthesis_time.run_folding(out="experiments/bench/synthesis_time_folding.csv")
-    emit("fig16_synthesis_time_folding", (time.time() - t0) * 1e6, "see csv")
-
-    # Tables 6/7 NID MLP
-    from benchmarks import nid_mlp
-
-    t0 = time.time()
-    rows = nid_mlp.run(out="experiments/bench/nid_mlp.csv")
-    cyc = ";".join(
-        f"L{r['layer']}:{r['exec_cycles_model']}v{r['exec_cycles_paper_rtl']}"
-        for r in rows
-    )
-    emit("table7_nid_cycles", (time.time() - t0) * 1e6, cyc)
-
-    t0 = time.time()
-    acc = nid_mlp.accuracy_check(steps=200)
-    emit("table7_nid_accuracy", (time.time() - t0) * 1e6,
-         f"float={acc['float_acc']:.3f};mvu_int={acc['mvu_int_acc']:.3f};"
-         f"interval={acc['pipeline_interval_cycles']}")
-
-    # Roofline table (reads dry-run artifacts if present)
-    import os
-
-    from benchmarks import roofline
-
-    dry = "experiments/dryrun_final" if os.path.isdir("experiments/dryrun_final") \
-        else "experiments/dryrun"
-    recs = roofline.load(dry)
-    ok = sum(1 for r in recs if not r.get("skipped"))
-    emit("roofline_cells_available", 0.0, f"dir={dry};compiled={ok};total={len(recs)}")
-
-    print(f"# total {time.time()-t_all:.1f}s", flush=True)
+    records = []
+    for mod in mods:
+        name = mod.__name__.split(".")[-1]
+        t0 = time.time()
+        rec = mod.run_quick(out_dir=args.out_dir)
+        records.append(rec)
+        print(f"[{name}] {time.time() - t0:.1f}s  {rec.get('summary', '')}",
+              flush=True)
+    print(f"# {len(records)} benchmarks in {time.time() - t_all:.1f}s",
+          flush=True)
+    return records
 
 
 if __name__ == "__main__":

@@ -27,10 +27,18 @@ itself must sit at or under its own ``max_<key>`` ceiling when one is
 present (the serving claim: p99 strictly better than the legacy server,
 ``max_p99_vs_server: 1.0``) -- the exact mirror of the speedup rules.
 
-A fresh record carrying gated keys (``speedup``, ``bit_exact``, or any
-``lower_is_better`` metric) that the committed baseline lacks fails with a
-clear "regenerate the baseline" message -- a grown benchmark must never
-silently escape the gate.
+Absolute-only metrics: wall-clock-derived ratios (the explorer's
+``cache_speedup``, its ``model_error_p90``) jitter too much run-to-run for
+a relative band, so a record may list keys under ``floor_only`` /
+``ceiling_only`` instead.  Each such key is held to its committed absolute
+bound alone (``min_<key>`` / ``max_<key>``, required in the baseline) on
+BOTH the baseline and the fresh record -- no baseline-relative band.
+
+A fresh record carrying gated keys (``speedup``, ``bit_exact``, any
+``lower_is_better`` metric, or any ``floor_only``/``ceiling_only`` metric)
+that the committed baseline lacks fails with a clear "regenerate the
+baseline" message -- a grown benchmark must never silently escape the
+gate.
 
 Absolute samples/s numbers from both runs are printed for the log but not
 gated.  Exits non-zero on the first failure so CI fails the build.
@@ -53,6 +61,8 @@ def check_record(name: str, base: dict, fresh: dict, *,
     # letting the new metric silently escape the gate (or KeyError later).
     gated_fresh = {k for k in ("speedup", "bit_exact") if k in fresh}
     gated_fresh.update(fresh.get("lower_is_better", ()))
+    gated_fresh.update(fresh.get("floor_only", ()))
+    gated_fresh.update(fresh.get("ceiling_only", ()))
     stale = sorted(k for k in gated_fresh if k not in base)
     if stale:
         errors.append(
@@ -98,6 +108,33 @@ def check_record(name: str, base: dict, fresh: dict, *,
                 f"{name}: {key} {f_val:.3f} regressed >"
                 f"{max_regression:.0%} vs baseline {b_val:.3f} "
                 f"(ceiling {ceiling:.3f})")
+    for direction, list_key in (("floor", "floor_only"), ("ceiling", "ceiling_only")):
+        # absolute-only metrics: wall-clock ratios too noisy for a relative
+        # band are held to their committed bound alone, on both records
+        for key in base.get(list_key, ()):
+            bound = base.get(f"min_{key}" if direction == "floor" else f"max_{key}")
+            if bound is None:
+                errors.append(
+                    f"{name}: {list_key} metric {key!r} has no "
+                    f"{'min' if direction == 'floor' else 'max'}_{key} bound "
+                    f"in the committed baseline")
+                continue
+            for side, rec in (("baseline", base), ("fresh", fresh)):
+                val = rec.get(key)
+                if val is None:
+                    errors.append(
+                        f"{name}: {list_key} metric {key!r} missing from the "
+                        f"{side} record")
+                elif direction == "floor" and val < bound:
+                    errors.append(
+                        f"{name}: {side} {key} {val:.3f} is below its "
+                        f"{bound:.3f} floor"
+                        + (" -- refresh the baseline" if side == "baseline" else ""))
+                elif direction == "ceiling" and val > bound:
+                    errors.append(
+                        f"{name}: {side} {key} {val:.3f} exceeds its "
+                        f"{bound:.3f} ceiling"
+                        + (" -- refresh the baseline" if side == "baseline" else ""))
     for key in ("fused_samples_per_s", "unfused_samples_per_s"):
         if key in base or key in fresh:
             print(f"  {name}.{key}: baseline={base.get(key, float('nan')):.0f} "

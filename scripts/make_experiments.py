@@ -1,106 +1,341 @@
-"""Assemble EXPERIMENTS.md from dry-run JSONs + benchmark CSVs + the
-hillclimb iteration records.  Run after dryrun/hillclimb/benchmarks:
+"""Render EXPERIMENTS.md (+ docs/figures/*.svg) from committed artifacts.
 
-    PYTHONPATH=src:. python scripts/make_experiments.py
+Single source of truth for the experiments document: everything below is
+read from JSON records checked into the repo, so the output is
+deterministic and CI can regenerate it and fail on drift
+(``git diff --exit-code EXPERIMENTS.md docs/figures``).
+
+Inputs (all committed):
+  experiments/bench/*.json             benchmark records (regression-gated)
+  experiments/explore/*_explore.json   design-space explorer sweeps
+  experiments/build/*_build_report.json  sample BuildReports
+  repro.configs.*.TUNED_SCHEDULES      committed autotune winners
+
+Regenerate the artifacts, then this document:
+
+    python -m benchmarks.run --out-dir experiments/bench
+    python -m repro.explore --config nid_mlp --quick
+    python scripts/make_experiments.py
+
+The SVG figures are hand-rolled (no plotting dependency, byte-stable
+output) -- same data as the tables, drawn for the paper-figure analogs.
 """
 
-import csv
+from __future__ import annotations
+
 import glob
 import json
+import math
 import os
 import sys
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.roofline import dryrun_table, fmt_bytes, load, roofline_table
+FIG_DIR = "docs/figures"
+PALETTE = ["#4477aa", "#ee6677", "#228833", "#ccbb44", "#66ccee", "#aa3377"]
 
 
-def csv_rows(path):
+def _load(path):
     if not os.path.exists(path):
-        return []
+        return None
     with open(path) as f:
-        return list(csv.DictReader(f))
+        return json.load(f)
 
 
-def hillclimb_rows(pattern):
+# --------------------------------------------------------------- svg helpers
+def _fmt(x: float) -> str:
+    """Deterministic coordinate formatting (fixed precision, no exponents)."""
+    return f"{x:.2f}".rstrip("0").rstrip(".")
+
+
+def _ticks(lo: float, hi: float, n: int = 5) -> list[float]:
+    """'Nice' linear tick positions covering [lo, hi]."""
+    if hi <= lo:
+        hi = lo + 1.0
+    raw = (hi - lo) / max(n - 1, 1)
+    mag = 10 ** math.floor(math.log10(raw))
+    step = min(s * mag for s in (1, 2, 5, 10) if s * mag >= raw)
+    start = math.floor(lo / step) * step
     out = []
-    for p in sorted(glob.glob(pattern)):
-        with open(p) as f:
-            d = json.load(f)
-        if d.get("skipped"):
-            continue
-        tag = os.path.basename(p)[:-5].split("__")[-1]
-        r = d["roofline"]
-        out.append({
-            "it": tag,
-            "quant": d.get("quant") or "-",
-            "fsdp": d.get("fsdp"),
-            "seq_sp": d.get("seq_sp"),
-            "naive": d.get("naive_attn"),
-            "args_dev": d["memory"]["argument_bytes"],
-            "temp_dev": d["memory"]["temp_bytes"],
-            "compute_s": r["compute_s"],
-            "memory_s": r["memory_s"],
-            "coll_s": r["collective_s"],
-            "dominant": r["dominant"],
-            "bound_s": r["bound_s"],
-        })
-    return sorted(out, key=lambda r: r["it"])
+    t = start
+    while t <= hi + step * 0.5:
+        out.append(round(t, 10))
+        t += step
+    return out
 
 
-def hc_table(rows):
-    lines = ["| iter | quant | fsdp | seq-sp | args/dev | temp/dev | compute s | memory s | coll s | dominant |",
-             "|---|---|---|---|---|---|---|---|---|---|"]
-    for r in rows:
-        lines.append(
-            f"| {r['it']} | {r['quant']} | {r['fsdp']} | {r['seq_sp']} | "
-            f"{fmt_bytes(r['args_dev'])} | {fmt_bytes(r['temp_dev'])} | "
-            f"{r['compute_s']:.4g} | {r['memory_s']:.4g} | {r['coll_s']:.4g} | "
-            f"{r['dominant']} |")
-    return "\n".join(lines)
+def _log_ticks(lo: float, hi: float) -> list[float]:
+    lo_e = math.floor(math.log10(max(lo, 1e-12)))
+    hi_e = math.ceil(math.log10(max(hi, 1e-12)))
+    return [10.0 ** e for e in range(lo_e, hi_e + 1)]
 
 
-def main():
-    final = load("experiments/dryrun_final") or load("experiments/dryrun")
-    base = load("experiments/dryrun")
+def _si(v: float) -> str:
+    """Tick labels: 1.5k / 2M style, deterministic."""
+    for div, suf in ((1e9, "G"), (1e6, "M"), (1e3, "k")):
+        if abs(v) >= div:
+            s = f"{v / div:.3g}"
+            return s + suf
+    return f"{v:.4g}"
 
-    nid = csv_rows("experiments/bench/nid_mlp.csv")
-    sweep = csv_rows("experiments/bench/resource_sweep.csv")
-    chain = csv_rows("experiments/bench/synthesis_time_chain.csv")
-    large = csv_rows("experiments/bench/resource_large.csv")
 
-    hc_a = hillclimb_rows("experiments/hillclimb/granite*__prefill_32k*.json")
-    hc_b = hillclimb_rows("experiments/hillclimb/qwen2*__prefill_32k*.json")
-    hc_c = hillclimb_rows("experiments/hillclimb/command*__decode_32k*.json")
+class _Canvas:
+    """Minimal deterministic SVG plot surface with margins + axes."""
 
-    doc = []
-    w = doc.append
+    def __init__(self, width=660, height=360, title="", xlabel="", ylabel=""):
+        self.w, self.h = width, height
+        self.ml, self.mr, self.mt, self.mb = 62, 16, 34, 46
+        self.title, self.xlabel, self.ylabel = title, xlabel, ylabel
+        self.body: list[str] = []
 
-    w("# EXPERIMENTS\n")
-    w("All artifacts regenerable: `python -m repro.launch.dryrun --all --mesh "
-      "both --seq-sp --save-dir experiments/dryrun_final`, "
-      "`bash scripts/hillclimb.sh`, `python -m benchmarks.run`.\n")
-    w("Hardware model: TPU v5e — 197 TFLOP/s bf16 (394 TOP/s int8), "
-      "819 GB/s HBM, 50 GB/s/link ICI, 16 GB HBM/chip. Meshes: single pod "
-      "(16,16)=('data','model') 256 chips; multi-pod (2,16,16)="
-      "('pod','data','model') 512 chips.\n")
+    @property
+    def plot_w(self):
+        return self.w - self.ml - self.mr
 
-    # ----------------------------------------------------------- paper claims
+    @property
+    def plot_h(self):
+        return self.h - self.mt - self.mb
+
+    def set_scales(self, x_lo, x_hi, y_lo, y_hi, log_x=False, log_y=False):
+        self.log_x, self.log_y = log_x, log_y
+        if log_x:
+            x_lo, x_hi = math.log10(max(x_lo, 1e-12)), math.log10(max(x_hi, 1e-12))
+        if log_y:
+            y_lo, y_hi = math.log10(max(y_lo, 1e-12)), math.log10(max(y_hi, 1e-12))
+        self.x_lo, self.x_hi = x_lo, (x_hi if x_hi > x_lo else x_lo + 1)
+        self.y_lo, self.y_hi = y_lo, (y_hi if y_hi > y_lo else y_lo + 1)
+
+    def px(self, x):
+        if self.log_x:
+            x = math.log10(max(x, 1e-12))
+        return self.ml + (x - self.x_lo) / (self.x_hi - self.x_lo) * self.plot_w
+
+    def py(self, y):
+        if self.log_y:
+            y = math.log10(max(y, 1e-12))
+        return self.mt + self.plot_h - (y - self.y_lo) / (self.y_hi - self.y_lo) * self.plot_h
+
+    def axes(self, x_ticks, y_ticks):
+        b = self.body
+        for t in y_ticks:
+            y = self.py(t)
+            b.append(f'<line x1="{self.ml}" y1="{_fmt(y)}" x2="{self.w - self.mr}" '
+                     f'y2="{_fmt(y)}" stroke="#dddddd" stroke-width="1"/>')
+            b.append(f'<text x="{self.ml - 6}" y="{_fmt(y + 3)}" text-anchor="end" '
+                     f'font-size="10" fill="#555555">{_si(t)}</text>')
+        for t in x_ticks:
+            x = self.px(t)
+            b.append(f'<line x1="{_fmt(x)}" y1="{self.mt}" x2="{_fmt(x)}" '
+                     f'y2="{self.h - self.mb}" stroke="#eeeeee" stroke-width="1"/>')
+            b.append(f'<text x="{_fmt(x)}" y="{self.h - self.mb + 14}" '
+                     f'text-anchor="middle" font-size="10" fill="#555555">{_si(t)}</text>')
+        b.append(f'<rect x="{self.ml}" y="{self.mt}" width="{self.plot_w}" '
+                 f'height="{self.plot_h}" fill="none" stroke="#888888"/>')
+
+    def legend(self, labels_colors):
+        x = self.ml + 8
+        for label, color in labels_colors:
+            self.body.append(f'<rect x="{x}" y="{self.mt + 6}" width="10" '
+                             f'height="10" fill="{color}"/>')
+            self.body.append(f'<text x="{x + 14}" y="{self.mt + 15}" '
+                             f'font-size="10" fill="#333333">{label}</text>')
+            x += 14 + 7 * len(label) + 14
+
+    def render(self) -> str:
+        head = [
+            f'<svg xmlns="http://www.w3.org/2000/svg" width="{self.w}" '
+            f'height="{self.h}" viewBox="0 0 {self.w} {self.h}" '
+            f'font-family="Helvetica, Arial, sans-serif">',
+            f'<rect width="{self.w}" height="{self.h}" fill="#ffffff"/>',
+            f'<text x="{self.w // 2}" y="18" text-anchor="middle" '
+            f'font-size="13" fill="#111111">{self.title}</text>',
+            f'<text x="{self.w // 2}" y="{self.h - 8}" text-anchor="middle" '
+            f'font-size="11" fill="#333333">{self.xlabel}</text>',
+            f'<text x="14" y="{self.h // 2}" text-anchor="middle" font-size="11" '
+            f'fill="#333333" transform="rotate(-90 14 {self.h // 2})">'
+            f'{self.ylabel}</text>',
+        ]
+        return "\n".join(head + self.body + ["</svg>"]) + "\n"
+
+
+def line_chart(series, *, title, xlabel, ylabel, log_x=False, log_y=False):
+    """series: [(label, [(x, y), ...]), ...]"""
+    xs = [x for _, pts in series for x, _ in pts]
+    ys = [y for _, pts in series for _, y in pts]
+    c = _Canvas(title=title, xlabel=xlabel, ylabel=ylabel)
+    c.set_scales(min(xs), max(xs), 0 if not log_y else min(ys), max(ys),
+                 log_x=log_x, log_y=log_y)
+    x_ticks = _log_ticks(min(xs), max(xs)) if log_x else _ticks(min(xs), max(xs))
+    y_ticks = (_log_ticks(min(ys), max(ys)) if log_y
+               else _ticks(0, max(ys)))
+    c.axes(x_ticks, y_ticks)
+    for i, (label, pts) in enumerate(series):
+        color = PALETTE[i % len(PALETTE)]
+        path = " ".join(f"{'M' if j == 0 else 'L'}{_fmt(c.px(x))},{_fmt(c.py(y))}"
+                        for j, (x, y) in enumerate(sorted(pts)))
+        c.body.append(f'<path d="{path}" fill="none" stroke="{color}" '
+                      f'stroke-width="2"/>')
+        for x, y in pts:
+            c.body.append(f'<circle cx="{_fmt(c.px(x))}" cy="{_fmt(c.py(y))}" '
+                          f'r="3" fill="{color}"/>')
+    c.legend([(label, PALETTE[i % len(PALETTE)])
+              for i, (label, _) in enumerate(series)])
+    return c.render()
+
+
+def bar_chart(groups, series_labels, *, title, xlabel, ylabel, log_y=False):
+    """groups: [(group_label, [v_series0, v_series1, ...]), ...]"""
+    vals = [v for _, vs in groups for v in vs]
+    c = _Canvas(title=title, xlabel=xlabel, ylabel=ylabel)
+    y_lo = min(vals) / 10 if log_y else 0
+    c.set_scales(0, 1, y_lo, max(vals), log_y=log_y)
+    y_ticks = _log_ticks(min(vals), max(vals)) if log_y else _ticks(0, max(vals))
+    c.axes([], y_ticks)
+    n_g, n_s = len(groups), len(series_labels)
+    slot = c.plot_w / n_g
+    bar_w = slot * 0.7 / n_s
+    for gi, (label, vs) in enumerate(groups):
+        x0 = c.ml + gi * slot + slot * 0.15
+        for si, v in enumerate(vs):
+            color = PALETTE[si % len(PALETTE)]
+            y = c.py(v)
+            h = c.mt + c.plot_h - y
+            c.body.append(f'<rect x="{_fmt(x0 + si * bar_w)}" y="{_fmt(y)}" '
+                          f'width="{_fmt(bar_w - 2)}" height="{_fmt(max(h, 0))}" '
+                          f'fill="{color}"/>')
+        c.body.append(f'<text x="{_fmt(c.ml + gi * slot + slot / 2)}" '
+                      f'y="{c.h - c.mb + 14}" text-anchor="middle" '
+                      f'font-size="10" fill="#555555">{label}</text>')
+    c.legend([(label, PALETTE[i % len(PALETTE)])
+              for i, label in enumerate(series_labels)])
+    return c.render()
+
+
+def heat_grid(xs, ys, cell_value, *, title, xlabel, ylabel, unit=""):
+    """Grid heatmap; cell_value(x, y) -> float.  Blue = low, red = high."""
+    vals = [cell_value(x, y) for x in xs for y in ys]
+    lo, hi = min(vals), max(vals)
+    c = _Canvas(title=title, xlabel=xlabel, ylabel=ylabel)
+    cw, ch = c.plot_w / len(xs), c.plot_h / len(ys)
+
+    def color(v):
+        t = 0.5 if hi == lo else (v - lo) / (hi - lo)
+        r = int(68 + t * (238 - 68))
+        g = int(119 - t * (119 - 102))
+        b = int(170 - t * (170 - 119))
+        return f"#{r:02x}{g:02x}{b:02x}"
+
+    for xi, x in enumerate(xs):
+        for yi, y in enumerate(ys):
+            v = cell_value(x, y)
+            px = c.ml + xi * cw
+            py = c.mt + (len(ys) - 1 - yi) * ch
+            c.body.append(f'<rect x="{_fmt(px)}" y="{_fmt(py)}" '
+                          f'width="{_fmt(cw - 1)}" height="{_fmt(ch - 1)}" '
+                          f'fill="{color(v)}"/>')
+            c.body.append(f'<text x="{_fmt(px + cw / 2)}" y="{_fmt(py + ch / 2 + 3)}" '
+                          f'text-anchor="middle" font-size="10" '
+                          f'fill="#ffffff">{_si(v)}{unit}</text>')
+    for xi, x in enumerate(xs):
+        c.body.append(f'<text x="{_fmt(c.ml + xi * cw + cw / 2)}" '
+                      f'y="{c.h - c.mb + 14}" text-anchor="middle" '
+                      f'font-size="10" fill="#555555">{x}</text>')
+    for yi, y in enumerate(ys):
+        c.body.append(f'<text x="{c.ml - 6}" '
+                      f'y="{_fmt(c.mt + (len(ys) - 1 - yi) * ch + ch / 2 + 3)}" '
+                      f'text-anchor="end" font-size="10" fill="#555555">{y}</text>')
+    return c.render()
+
+
+def write_fig(name: str, svg: str) -> str:
+    os.makedirs(FIG_DIR, exist_ok=True)
+    path = os.path.join(FIG_DIR, name)
+    with open(path, "w") as f:
+        f.write(svg)
+    return path
+
+
+# ------------------------------------------------------------------ figures
+def fig_resource_curve(sweep: dict) -> str | None:
+    curve = sweep.get("folding_curve") if sweep else None
+    if not curve:
+        return None
+    series = [
+        ("LUT analog (datapath VMEM B)",
+         [(r["pe_simd"], r["rtl_lut_bytes"]) for r in curve]),
+        ("FF analog (acc/control B)",
+         [(r["pe_simd"], r["rtl_ff_bytes"]) for r in curve]),
+        ("BRAM analog (weight store B)",
+         [(r["pe_simd"], r["rtl_bram_bytes"]) for r in curve]),
+    ]
+    svg = line_chart(series, title="Resource analogs vs PE*SIMD (Figs 8-13 analog)",
+                     xlabel="PE * SIMD (datapath MACs/cycle)",
+                     ylabel="bytes", log_x=True, log_y=True)
+    return write_fig("fig_resource_sweep.svg", svg)
+
+
+def fig_heatmap(hm: dict) -> str | None:
+    if not hm:
+        return None
+    cells = {(c["PE"], c["SIMD"]): c["delta_lut_bytes"] for c in hm["cells"]}
+    svg = heat_grid(hm["pes"], hm["simds"], lambda pe, simd: cells[(pe, simd)],
+                    title="HLS temp - RTL LUT-analog bytes (Fig 14 analog)",
+                    xlabel="PE", ylabel="SIMD", unit="B")
+    return write_fig("fig_heatmap.svg", svg)
+
+
+def fig_interval(explore: dict) -> str | None:
+    if not explore:
+        return None
+    pts = sorted(explore["points"], key=lambda p: p["pe_simd_product"])
+    series = [
+        ("steady-state interval (cycles)",
+         [(p["pe_simd_product"], p["interval_cycles"]) for p in pts]),
+        ("latency (cycles)",
+         [(p["pe_simd_product"], p["latency_cycles"]) for p in pts]),
+    ]
+    svg = line_chart(series,
+                     title="Interval/latency vs folding (Table 5 / Fig 15 analog)",
+                     xlabel="sum of PE*SIMD across stages",
+                     ylabel="cycles", log_x=True, log_y=True)
+    return write_fig("fig_interval_sweep.svg", svg)
+
+
+def fig_synthesis(synth: dict, explore: dict) -> str | None:
+    if not synth:
+        return None
+    groups = [(f"L={r['value']}", [r["hls_compile_s"], r["rtl_compile_s"]])
+              for r in synth["chain"]]
+    if explore and explore.get("cache"):
+        c = explore["cache"]
+        groups.append(("cold/warm", [c["cold_wall_s"], c["warm_wall_s"]]))
+    svg = bar_chart(groups, ["monolithic (HLS analog)", "modular+cached (RTL analog)"],
+                    title="Synthesis-time analog: compile/tune wall-clock (Fig 16)",
+                    xlabel="design size (chain depth) | explorer cold vs warm build",
+                    ylabel="seconds")
+    return write_fig("fig_synthesis_time.svg", svg)
+
+
+# ----------------------------------------------------------------- sections
+def section_claims(w, sweep, crit, synth, nid):
     w("\n## Paper-claims validation (the faithful reproduction)\n")
     w("The paper's five headline findings (DESIGN.md §1), re-evaluated under "
       "the TPU metric mapping (RTL→Pallas closed-form model, HLS→XLA "
-      "measured):\n")
+      "measured). Each claim reads from a committed, regression-gated "
+      "benchmark record under `experiments/bench/`.\n")
     if nid:
         cyc = "; ".join(f"L{r['layer']}: {r['exec_cycles_model']} model vs "
-                        f"{r['exec_cycles_paper_rtl']} paper" for r in nid)
+                        f"{r['exec_cycles_paper_rtl']} paper"
+                        for r in nid["layers"])
         w(f"* **C5 (II=1 / exec cycles) — reproduced exactly.** The folding "
           f"cycle model NF·SF + 5 pipeline stages reproduces Table 7's "
           f"execution cycles on all four NID layers: {cyc}.")
     if sweep:
-        small = [r for r in sweep if int(r["PE"]) * int(r["SIMD"]) <= 16
-                 and r["simd_type"] == "standard"]
+        small = [r for r in sweep["configs"]
+                 if r["PE"] * r["SIMD"] <= 16 and r["simd_type"] == "standard"
+                 and "hls_temp_bytes" in r]
         if small:
-            ratios = [float(r["hls_temp_bytes"]) / max(float(r["rtl_lut_bytes"]), 1)
+            ratios = [r["hls_temp_bytes"] / max(r["rtl_lut_bytes"], 1)
                       for r in small]
             w(f"* **C1 (small designs: RTL ≪ HLS) — reproduced.** Across the "
               f"PE·SIMD ≤ 16 sweep points the XLA path's temp allocation is "
@@ -111,193 +346,151 @@ def main():
               f"LUT-count crossover), so the paper's large-design crossover "
               f"(HLS winning by ≤15% LUTs) does **not** transfer — noted as "
               f"an adaptation delta.")
-        ifm = [r for r in sweep if r["sweep"] == "cfg1:ifm_ch" and r["simd_type"] == "standard"]
+        ifm = [r for r in sweep["configs"]
+               if r["sweep"] == "cfg1:ifm_ch" and r["simd_type"] == "standard"]
         if len(ifm) >= 2:
+            hls_growth = (f"{ifm[-1]['hls_temp_bytes'] / ifm[0]['hls_temp_bytes']:.0f}× "
+                          if "hls_temp_bytes" in ifm[0] else "")
             w(f"* **C2 (IFM-channel sensitivity) — reproduced in structure.** "
               f"Sweeping IFM channels {ifm[0]['value']}→{ifm[-1]['value']}: "
               f"the RTL FF analog (pipeline state) stays flat "
               f"({ifm[0]['rtl_ff_bytes']}→{ifm[-1]['rtl_ff_bytes']} bytes — the "
               f"paper's flat RTL curves), while buffers grow with the input-"
               f"buffer depth K/SIMD exactly as Eq. 2 predicts "
-              f"(inbuf {ifm[0]['rtl_inbuf_depth']}→{ifm[-1]['rtl_inbuf_depth']}); "
-              f"the HLS-analog temp grows "
-              f"{float(ifm[-1]['hls_temp_bytes'])/float(ifm[0]['hls_temp_bytes']):.0f}× "
-              f"over the same range.")
-    w("* **C3 (critical path) — structural claims reproduced** "
-      "(benchmarks/critical_path.py): per-step datapath width (PE·SIMD, the "
-      "FPGA critical-path driver) is invariant across IFM/OFM sweeps and "
-      "grows with PE/SIMD; per-output latency from the cycle model follows "
-      "the paper's latency curves. The absolute 45–80% clock-rate gap has no "
-      "TPU analog (fixed clock) — documented, not claimed.")
-    if chain:
-        first, last = chain[0], chain[-1]
+              f"(inbuf {ifm[0]['rtl_inbuf_depth']}→{ifm[-1]['rtl_inbuf_depth']})"
+              + (f"; the HLS-analog temp grows {hls_growth}over the same range."
+                 if hls_growth else "."))
+    if crit:
+        ok = all(crit["claims"].values())
+        w(f"* **C3 (critical path) — structural claims "
+          f"{'reproduced' if ok else 'FAILED'}** "
+          f"(`benchmarks/critical_path.py`, claims {crit['claims']}): per-step "
+          f"datapath width (PE·SIMD, the FPGA critical-path driver) is "
+          f"invariant across IFM/OFM sweeps and grows with PE/SIMD; "
+          f"per-output latency from the cycle model follows the paper's "
+          f"latency curves. The absolute 45–80% clock-rate gap has no TPU "
+          f"analog (fixed clock) — documented, not claimed.")
+    if synth:
+        first, last = synth["chain"][0], synth["chain"][-1]
         w(f"* **C4 (synthesis time) — mechanism reproduced.** The monolithic "
           f"compile of a generated L-layer dataflow graph (HLS analog) grows "
-          f"{float(last['hls_compile_s'])/max(float(first['hls_compile_s']),1e-9):.1f}× "
-          f"from L={first['value']} to L={last['value']}, while the modular "
-          f"Pallas path compiles each kernel parameterization once "
-          f"(flat {last['rtl_compile_s']}s) — at L={last['value']} the ratio "
-          f"is {last['hls/rtl']}×. (On this CPU container the HLS analog is "
-          f"XLA; Mosaic compile on real TPUs is the true RTL-synthesis "
-          f"analog.)")
+          f"{synth['hls_growth']:.1f}× from L={first['value']} to "
+          f"L={last['value']}, while the modular Pallas path compiles each "
+          f"kernel parameterization once (flat {last['rtl_compile_s']:.2f}s) "
+          f"— at L={last['value']} the ratio is {last['hls_over_rtl']:.1f}×. The "
+          f"end-to-end caching result (cold sweep vs warm replay) is in the "
+          f"design-space exploration section below.")
     if nid:
-        w("* **NID use case (Table 6/7) — end-to-end.** QAT training on the "
-          "synthetic UNSW-NB15 stand-in, streamlining (BN+quant → integer "
-          "thresholds), Table 6 PE/SIMD folding, integer inference through "
-          "the Pallas MVU kernels: float teacher and integer pipeline both "
-          "reach 100% test accuracy; dataflow interval 12 cycles, "
-          "bottleneck layer 0 (matches the paper's layer-0-heavy design).\n")
+        acc = nid["accuracy"]
+        w(f"* **NID use case (Table 6/7) — end-to-end.** QAT training on the "
+          f"synthetic UNSW-NB15 stand-in, streamlining (BN+quant → integer "
+          f"thresholds), Table 6 PE/SIMD folding, integer inference through "
+          f"the Pallas MVU kernels: float teacher {acc['float_acc']:.3f} vs "
+          f"integer pipeline {acc['mvu_int_acc']:.3f} test accuracy; "
+          f"dataflow interval {acc['pipeline_interval_cycles']} cycles, "
+          f"bottleneck {acc['bottleneck']} (matches the paper's "
+          f"layer-0-heavy design).\n")
 
-    # ----------------------------------------------------------- dryrun
-    for mesh in ("pod", "multipod"):
-        n_ok = sum(1 for r in final if r.get("mesh") == mesh and not r.get("skipped"))
-        n_skip = sum(1 for r in final if r.get("mesh") == mesh and r.get("skipped"))
-        w(f"\n## Dry-run — {mesh} mesh ({'16x16, 256 chips' if mesh=='pod' else '2x16x16, 512 chips'}): "
-          f"{n_ok} cells compiled, {n_skip} skipped\n")
-        w("Every cell is `jit(fn, in_shardings=...).lower(ShapeDtypeStructs)"
-          ".compile()` — no allocation. `args/dev` = persistent per-device "
-          "bytes (params+opt+caches; the fit proof), `temp/dev` = XLA CPU-"
-          "backend temporaries (upper bound — the CPU backend does not fuse "
-          "like Mosaic). Collective GB/chip: while-body ops × scan trips.\n")
-        w(dryrun_table(final, mesh))
 
-    # ----------------------------------------------------------- roofline
-    w("\n## Roofline (single pod, per assignment)\n")
-    w("`compute_s` = HLO_FLOPs/(chips·197e12) with HLO FLOPs from two "
-      "UNROLLED shallow variants linearly extrapolated (XLA cost_analysis "
-      "counts while bodies once — measured, see dryrun.py). `memory_s` uses "
-      "the fused-stream analytic model (the CPU backend's 'bytes accessed' "
-      "overstates HBM traffic 10–300× from missing fusion; both are "
-      "recorded, `roofline_hlo_bytes` keeps the spec-formula value). "
-      "`collective_s` = parsed collective bytes/(chips·50e9). "
-      "MODEL_FLOPS = 6·N·D (train) / 2·N·D (serve), N = active params.\n")
-    w(roofline_table(final, "pod"))
-    w("\nReading the table: train/prefill cells are **compute-dominant** at "
-      "useful-FLOPs ratios of ~0.6–0.9 (remat recompute + attention "
-      "quadratic terms explain the gap to 1.0); decode cells are "
-      "**memory-dominant** (weight + KV streams at batch·1 token), which is "
-      "precisely the regime the paper's quantized MVU attacks — see §Perf "
-      "cell C.\n")
+def section_explore(w, explore, figs):
+    if not explore:
+        return
+    w("\n## Design-space exploration (`repro.explore`)\n")
+    w(f"The paper's experimental loop — synthesize every folding, read the "
+      f"trade-off curves off the reports — run through the `repro.build` "
+      f"pipeline on `{explore['config']}`: "
+      f"{explore['n_points']} grid points (PE targets "
+      f"{explore['grid']['pe_targets']}, SIMD targets "
+      f"{explore['grid']['simd_targets']}), every point built with "
+      f"verification on and measured end-to-end (batch {explore['batch']}). "
+      f"All points bit-exact: **{explore['bit_exact']}**. Regenerate: "
+      f"`python -m repro.explore --config nid_mlp --quick`.\n")
+    if figs.get("interval"):
+        w(f"![interval vs folding]({figs['interval']})\n")
+    w("| point | PE tgt | SIMD tgt | interval cyc | samples/s | LUT B | "
+      "FF B | BRAM B | Pareto |")
+    w("|---|---|---|---|---|---|---|---|---|")
+    for p in sorted(explore["points"], key=lambda r: r["pe_simd_product"]):
+        w(f"| {p['point_id']} | {p['pe_target']} | {p['simd_target']} "
+          f"| {p['interval_cycles']} | {p['samples_per_s']:.0f} "
+          f"| {p['lut_bytes']} | {p['ff_bytes']} | {p['bram_bytes']} "
+          f"| {'**yes**' if p['pareto'] else 'no'} |")
+    w(f"\nPareto frontier (maximize throughput, minimize LUT/FF/BRAM "
+      f"analogs): {', '.join(f'`{p}`' for p in explore['pareto_front'])}. "
+      f"The frontier keeps both extremes — minimal-area fully-folded points "
+      f"and the wide low-interval designs — exactly the paper's "
+      f"area-vs-throughput trade-off curve.\n")
 
-    # ----------------------------------------------------------- perf
-    w("\n## Perf — hypothesis → change → measure log\n")
-    w("Three cells per the assignment: worst roofline fraction "
-      "(granite prefill), most collective-bound (qwen2-vl prefill), most "
-      "paper-representative (command-r-plus decode). Baselines are the "
-      "paper-faithful port (naive attention, TP-only sharding, bf16 "
-      "weights); each iteration is one hypothesis.\n")
+    cal = explore.get("calibration") or {}
+    if cal:
+        s = cal["summary"]
+        w("### Resource-model calibration across the whole sweep\n")
+        w(f"One least-squares cycle time fit over all "
+          f"{cal['samples']} (point, node) measurements: "
+          f"s_per_cycle = {cal['s_per_cycle']:.3e} s "
+          f"(a {cal['clock_mhz_analog']:.1f} MHz effective clock analog on "
+          f"this host). Signed relative error of predicted = cycles × "
+          f"s_per_cycle vs measured per-stage time:\n")
+        w("| | n | mean abs | p50 abs | p90 abs | max abs | mean signed |")
+        w("|---|---|---|---|---|---|---|")
+        w(f"| all nodes | {s['n']} | {s['mean_abs']:.2f} | {s['p50_abs']:.2f} "
+          f"| {s['p90_abs']:.2f} | {s['max_abs']:.2f} | {s['mean_signed']:.2f} |")
+        for name, ns in cal.get("per_node", {}).items():
+            w(f"| `{name}` | {ns['n']} | {ns['mean_abs']:.2f} "
+              f"| {ns['p50_abs']:.2f} | {ns['p90_abs']:.2f} "
+              f"| {ns['max_abs']:.2f} | {ns['mean_signed']:.2f} |")
+        w(f"\nThe analytic II=1 cycle model is a *schedule* model, not a "
+          f"host-time model: on the CPU interpret path, fixed per-dispatch "
+          f"overhead dominates small stages, so errors are largest for "
+          f"deeply-folded points (p90 {s['p90_abs']:.2f}, gated at ceiling "
+          f"{explore.get('max_model_error_p90')}) — the same reason the "
+          f"paper reports HLS estimates diverging from RTL synthesis "
+          f"results. The fit direction is stable: the CI gate holds "
+          f"`model_error_p90` to its committed absolute ceiling.\n")
 
-    def d(rows, a, b, key):
-        ra = next((r for r in rows if r["it"].startswith(a)), None)
-        rb = next((r for r in rows if r["it"].startswith(b)), None)
-        if not (ra and rb) or not rb[key]:
-            return "n/a"
-        return f"{ra[key]/max(rb[key],1e-12):.1f}x"
+    cache = explore.get("cache") or {}
+    if cache:
+        w("### Synthesis-time cache: cold sweep vs warm replay\n")
+        w(f"Cold `tune=\"auto\"` build (measures every candidate schedule "
+          f"into an empty `ScheduleCache`): **{cache['cold_wall_s']:.2f} s** "
+          f"({cache['cold_misses']} misses tuned). Warm `tune=\"cache\"` "
+          f"rebuild of the same design from the filled cache: "
+          f"**{cache['warm_wall_s']:.2f} s** ({cache['warm_hits']} hits, "
+          f"{cache['warm_misses']} misses, nothing measured) — "
+          f"**{cache['cache_speedup']:.1f}× faster**, the software analog "
+          f"of the paper's ~10× synthesis-time saving from out-of-context "
+          f"checkpoint reuse. CI-gated at an absolute "
+          f"{explore.get('min_cache_speedup')}× floor (`floor_only`).\n")
 
-    if hc_a:
-        w("\n### Cell A: granite-moe-3b-a800m × prefill_32k "
-          "(worst roofline fraction 0.55, collective/compute = 0.66)\n")
-        w(hc_table(hc_a))
-        w(f"\n* a0→a1 **CONFIRMED**: chunked attention. Hypothesis: the "
-          f"naive 32k×32k fp32 score tensors dominate temp memory *and* "
-          f"inflate the TP all-reduce payloads GSPMD re-shards per layer. "
-          f"Measured: temp/dev {d(hc_a,'a0','a1','temp_dev')} smaller "
-          f"(now fits HBM), compute term {d(hc_a,'a0','a1','compute_s')} "
-          f"down, collective term {d(hc_a,'a0','a1','coll_s')} down.")
-        w("* a1→a2 **REFUTED (by design)**: sequence-sharding the residual "
-          "stream targets remat-boundary *saves*, but prefill has no "
-          "backward pass — zero effect on inference cells. SP stays a "
-          "train-only lever (it applies in the final train-cell pass).")
-        w("* a2→a3 **CONFIRMED (negative result)**: FSDP on a 3B MoE "
-          "regresses everything — per-layer weight all-gathers + "
-          "f-dim-sharded experts force psums inside every expert GEMM "
-          "(AR 151→1079 GB). FSDP is a capacity tool, not a speed tool; "
-          "the auto-threshold (>8 GB/chip) correctly leaves it off here.")
-    if hc_b:
-        w("\n### Cell B: qwen2-vl-7b × prefill_32k (largest collective volume)\n")
-        w(hc_table(hc_b))
-        w(f"\n* b0→b1 **CONFIRMED**: same chunked-attention hypothesis at "
-          f"28 layers/32k: collective term {d(hc_b,'b0','b1','coll_s')} "
-          f"down (AR 1737→159 GB/chip), compute "
-          f"{d(hc_b,'b0','b1','compute_s')} down, temp "
-          f"{d(hc_b,'b0','b1','temp_dev')} down. The M-RoPE/VLM path adds "
-          f"no collectives of its own — the whole excess was the naive "
-          f"score tensors.")
-        w("* b1→b2: no further change (prefill; same SP reasoning as a2).")
-    if hc_c:
-        w("\n### Cell C: command-r-plus-104b × decode_32k "
-          "(memory-bound; the paper's technique)\n")
-        w(hc_table(hc_c))
-        w("\n* c0 baseline: bf16 weights TP-16 = 13 GB/chip + 4.3 GB KV = "
-          "**17.7 GB/chip: does not fit 16 GB HBM**; memory term 0.0218 s "
-          "= the full weight+KV stream per token.")
-        w("* c0→c1 **CONFIRMED as capacity fix, REFUTED as perf fix**: "
-          "FSDP fits (5.1 GB/chip) but adds per-step weight all-gathers "
-          "over ICI — for latency-bound decode this trades the HBM wall "
-          "for an ICI wall.")
-        w(f"* c0→c2 **CONFIRMED**: W8A8 MVU (the paper's standard-SIMD "
-          f"datapath on the MXU) fits TP-only (11.4 GB/chip) and cuts the "
-          f"memory term {d(hc_c,'c0','c2','memory_s')}.")
-        w(f"* c2→c3 **CONFIRMED**: W4A8 — int4-packed storage, int8-carried "
-          f"MXU datapath — 8.2 GB/chip, memory term "
-          f"{d(hc_c,'c0','c3','memory_s')} vs baseline. The weight stream "
-          f"is now smaller than the KV stream: the bottleneck moved.")
-        w(f"* c3→c4 **CONFIRMED**: int8 KV cache (KIVI-style per-token-head "
-          f"scales, argmax-exact in tests) attacks the new bottleneck: "
-          f"6.2 GB/chip, memory term {d(hc_c,'c0','c4','memory_s')} vs "
-          f"baseline — a 2.8× end-to-end reduction of the dominant term, "
-          f"entirely from the paper's 'precision is the resource' thesis.")
-        w("* extension probe (qwen3-moe-235B decode, experiments/hillclimb/"
-          "*d1*): quantizing only the attention projections leaves the bf16 "
-          "expert bank (233B of 235B params) as the stream -- 30.6 GB/chip, "
-          "still over HBM; auto-FSDP (5.0 GB/chip, memory term 0.0063 s) "
-          "remains the capacity answer for fine-grained MoE serving. "
-          "Grouped-MVU expert quantization is the identified follow-up.\n")
 
-    # train cells before/after (baseline dir vs final dir)
-    base_idx = {(r["arch"], r["shape"], r["mesh"]): r for r in base if not r.get("skipped")}
-    fin_idx = {(r["arch"], r["shape"], r["mesh"]): r for r in final if not r.get("skipped")}
-    rows = []
-    for key, f in fin_idx.items():
-        if key[1] != "train_4k" or key[2] != "pod" or key not in base_idx:
-            continue
-        b = base_idx[key]
-        rows.append((key[0], b, f))
-    if rows and base is not final:
-        w("\n### Train cells: paper-faithful baseline vs optimized "
-          "(chunked attention + seq-SP + auto-FSDP), single pod\n")
-        w("| arch | compute s (b→o) | collective s (b→o) | temp/dev (b→o) | args/dev (b→o) |")
-        w("|---|---|---|---|---|")
-        for arch, b, f in sorted(rows):
-            br, fr = b["roofline"], f["roofline"]
-            w(f"| {arch} | {br['compute_s']:.3g} → {fr['compute_s']:.3g} "
-              f"| {br['collective_s']:.3g} → {fr['collective_s']:.3g} "
-              f"| {fmt_bytes(b['memory']['temp_bytes'])} → {fmt_bytes(f['memory']['temp_bytes'])} "
-              f"| {fmt_bytes(b['memory']['argument_bytes'])} → {fmt_bytes(f['memory']['argument_bytes'])} |")
-        w("\nDense/SSM/hybrid archs: activation temp drops 3-5x (remat "
-          "saves sequence-sharded) and collectives drop ~4x (chunked "
-          "attention removes the naive score-tensor reshards). "
-          "Fine-grained-MoE (granite/qwen3): seq-SP *regresses* compute -- "
-          "the MoE group reshape crosses the sharded sequence dim and GSPMD "
-          "replicates dispatch work; a seq-shard-aware group assignment is "
-          "the identified follow-up. FSDP archs (command-r/qwen3/jamba) "
-          "now fit HBM for training (e.g. command-r args 66.9GB -> 4.2GB/chip).\n")
+def section_figures(w, figs, sweep, hm):
+    w("\n## Paper-figure analogs\n")
+    w("Rendered from the committed records by `scripts/make_experiments.py` "
+      "(hand-rolled deterministic SVG — byte-stable, so CI can diff them).\n")
+    if figs.get("resource"):
+        w(f"![resource vs PE*SIMD]({figs['resource']})\n")
+        claims = sweep.get("claims", {}) if sweep else {}
+        w(f"Figs 8–13 analog: BRAM analog flat under folding "
+          f"(`{claims.get('bram_flat_under_folding')}`) — weights don't move "
+          f"when time-multiplexed; LUT/FF analogs grow with the PE·SIMD "
+          f"datapath; cycles shrink (Eq. 1).\n")
+    if figs.get("heatmap"):
+        w(f"![heatmap]({figs['heatmap']})\n")
+        if hm:
+            deltas = [c["delta_lut_bytes"] for c in hm["cells"]]
+            w(f"Fig 14 analog at N={hm['shape']['N']}, K={hm['shape']['K']}: "
+              f"the XLA (HLS-analog) footprint exceeds the folded Pallas "
+              f"working set by {min(deltas)}–{max(deltas)} bytes across the "
+              f"grid; the gap narrows as PE·SIMD grows (the RTL side's "
+              f"working set approaches the unfolded monolith).\n")
+    if figs.get("synthesis"):
+        w(f"![synthesis time]({figs['synthesis']})\n")
+        w("Fig 16 analog: monolithic compile grows with chain depth; the "
+          "modular+cached path is flat. The right-most pair is the "
+          "explorer's end-to-end cold-vs-warm build.\n")
 
-    # kernel-level
-    w("\n### Kernel-level: faithful XNOR datapath vs beyond-paper MXU variant\n")
-    w("The paper's XNOR-popcount lane is bit-serial LUT logic; the faithful "
-      "TPU port packs 32 synapses/uint32 on the VPU (SWAR popcount ≈ 12 int "
-      "ops / 32 MACs → ~10 T MAC/s peak at 0.94 GHz), while the beyond-paper "
-      "variant unpacks to ±1 int8 and uses the MXU (394 TOP/s ÷ 2 ops = 197 "
-      "T MAC/s). Napkin roofline: MXU wins ~19× on compute whenever the 8× "
-      "VMEM expansion of unpacking fits (K ≤ ~64k per tile); the bit-packed "
-      "path wins only when weight residency is the binding constraint — "
-      "mirroring the paper's own LUT-vs-DSP tradeoff. Both validated "
-      "bit-exact against ref.py (tests/test_kernels_mvu.py); CPU interpret "
-      "timings in bench_output.txt are correctness-path numbers, not TPU "
-      "projections.\n")
 
-    # ----------------------------------------------------------- autotuning
+def section_autotune(w):
     w("\n## Autotuning — heuristic folding vs empirical schedule search\n")
     w("`repro.core.autotune` replaces the one-shot `choose_folding` + "
       "`to_tpu_blocks` heuristic with a measured design-space search: "
@@ -309,10 +502,8 @@ def main():
       "them with zero measurement at load time; "
       "`python -m benchmarks.autotune_gain` re-proves the end-to-end gain "
       "(CI-gated at the committed record's 1.15x floor).\n")
-    gain_path = "experiments/bench/autotune_gain.json"
-    if os.path.exists(gain_path):
-        with open(gain_path) as fh:
-            gain = json.load(fh)
+    gain = _load("experiments/bench/autotune_gain.json")
+    if gain:
         w(f"End-to-end on `{gain['config']}` (batch {gain['batch']}): tuned "
           f"engine **{gain['speedup']:.2f}x** over the heuristic-default "
           f"engine, bit-exact={gain['bit_exact']}, "
@@ -321,132 +512,175 @@ def main():
           f"({gain.get('speedup_note', '')})\n")
     try:
         from repro.configs import cnv_bnn, nid_mlp
-
-        for title, mod in (("NID-MLP", nid_mlp), ("CNV (quick, xnor)", cnv_bnn)):
-            sched = getattr(mod, "TUNED_SCHEDULES", {})
-            node_rows = [(k, v) for k, v in sched.items()
-                         if not k.startswith("engine|")]
-            if not node_rows:
-                continue
-            w(f"\n### {title}: per-layer heuristic vs tuned schedule\n")
-            w("| cache key (device\\|op\\|mode\\|N\\|K\\|epilogue\\|px) | "
-              "tuned blocks (m, n, k-step/rows) | backend | node speedup |")
-            w("|---|---|---|---|")
-            for key, v in node_rows:
-                if "|conv" in key:
-                    kk = f"rt={v.get('rows_per_tile', 'auto')}"
-                elif "xnor" in key:
-                    kk = v["block_kw"]
-                else:
-                    kk = v["block_k"]
-                w(f"| `{key}` | ({v['block_m']}, {v['block_n']}, {kk}) "
-                  f"| {v['backend']} | {v['speedup']:.2f}x |")
-            eng = [(k, v) for k, v in sched.items() if k.startswith("engine|")]
-            for key, v in eng:
-                w(f"\nEngine-level: microbatch tile {v['microbatch']} "
-                  f"(tuned at batch {v['batch']}, {v['speedup']:.2f}x over "
-                  f"the heuristic plan).")
-            w("")
     except ImportError:
-        pass
-
-    # ----------------------------------------------------------- build reports
-    reports = sorted(glob.glob("experiments/build/*_build_report.json"))
-    if reports:
-        w("\n## Build pipeline (`repro.build`) — step reports\n")
-        w("Every accelerator is now produced by one "
-          "`repro.build.build(graph, target=...)` call running a FINN-style "
-          "list of named steps (lower → finalize → fold → fuse_epilogues → "
-          "fuse_swu → tune → dataflow → engine [→ calibrate]), each graph "
-          "rewrite verified bit-exact against the reference interpreter on "
-          "a probe batch. The BuildReport below is the software analog of "
-          "the paper's per-design resource/synthesis tables: per-step "
-          "wall-clock + verification, per-stage folding with LUT/FF/BRAM-"
-          "analog estimates, predicted vs measured steady-state interval, "
-          "and autotune cache accounting.\n")
-        for path in reports:
-            with open(path) as fh:
-                rep = json.load(fh)
-            w(f"\n### `{rep['name']}` (target `{rep['target']}`)\n")
-            w("| step | wall s | verified | graph ops after |")
-            w("|---|---|---|---|")
-            for s in rep["steps"]:
-                ops = ", ".join(f"{k}×{v}" for k, v in sorted(s["ops"].items()))
-                ver = {True: "bit-exact", None: "—"}.get(s["verified"], "FAIL")
-                w(f"| {s['name']} | {s['wall_s']:.3f} | {ver} | {ops} |")
-            if rep.get("nodes"):
-                w("\n| stage | op | N | K | PE | SIMD | cycles | LUT-analog B "
-                  "| BRAM-analog B | tuned |")
-                w("|---|---|---|---|---|---|---|---|---|---|")
-                for n in rep["nodes"]:
-                    w(f"| {n['name']} | {n['op']} | {n['n']} | {n['k']} "
-                      f"| {n['pe']} | {n['simd']} | {n['cycles']} "
-                      f"| {n['lut_bytes']} | {n['bram_bytes']} "
-                      f"| {'yes' if n['tuned'] else 'no'} |")
-            pred, meas = rep.get("predicted_interval_s"), rep.get("measured_interval_s")
-            line = (f"\nSteady-state interval: predicted "
-                    f"{pred * 1e6:.3f} µs (nominal 200 MHz)" if pred else "\n")
-            if meas:
-                line += (f", measured {meas * 1e6:.1f} µs "
-                         f"({rep['cycle_time_source']} cycle time)")
-            tune = rep.get("tune", {})
-            if tune.get("mode", "off") != "off":
-                line += (f"; autotune `{tune['mode']}`: "
-                         f"{tune.get('cache_hits', 0)} cache hits, "
-                         f"{tune.get('cache_misses', 0)} misses")
-            w(line + f". Total build wall-clock {rep['total_wall_s']:.2f} s.")
-
-    # ----------------------------------------------------------- serving load
-    serve_path = "experiments/bench/serving_load.json"
-    if os.path.exists(serve_path):
-        w("\n## Serving load — continuous batching vs submit/flush\n")
-        w("`repro.serving` fronts the fused engine with a bounded admission "
-          "queue, a continuous batcher (flush on bucket-fill / pipeline-idle "
-          "/ deadline-slack, the budget derived from "
-          "`DataflowSchedule.steady_state_interval` via "
-          "`dataflow.interval_seconds` with the measured cycle time), and a "
-          "multi-replica pool (params `device_put` per device, least-loaded "
-          "async dispatch).  `python -m benchmarks.serving_load` drives it "
-          "and the legacy cadence-flushed `EngineServer` with the same "
-          "open-loop Poisson arrivals; the committed record is CI-gated on "
-          ">=1.0x throughput (`min_speedup`) AND strictly-better p99 "
-          "(`lower_is_better: p99_vs_server`, ceiling 1.0).\n")
-        with open(serve_path) as fh:
-            sv = json.load(fh)
-        w(f"Open-loop Poisson on `{sv['config']}` ({sv['requests']} requests "
-          f"at {sv['rate_hz']:.0f}/s, SLO {sv['slo_ms']:.0f} ms, buckets "
-          f"{sv['buckets']}):\n")
-        w("| metric | continuous (`repro.serving`) | legacy `EngineServer` |")
-        w("|---|---|---|")
-        w(f"| p50 latency | {sv['serving_p50_ms']:.2f} ms "
-          f"| {sv['server_p50_ms']:.2f} ms |")
-        w(f"| p99 latency | {sv['serving_p99_ms']:.2f} ms "
-          f"| {sv['server_p99_ms']:.2f} ms |")
-        w(f"| deadline miss rate | {sv['serving_deadline_miss_rate']:.1%} "
-          f"| {sv['server_deadline_miss_rate']:.1%} |")
-        w(f"| open-loop completion | {sv['serving_samples_per_s']:.0f} "
-          f"samples/s | {sv['server_samples_per_s']:.0f} samples/s |")
-        w(f"| closed-loop saturation | "
-          f"{sv['closed_loop_serving_samples_per_s']:.0f} samples/s | "
-          f"{sv['closed_loop_server_samples_per_s']:.0f} samples/s |")
-        note = sv.get("claim_note")
-        w(f"\nCommitted claim: **{sv['speedup']:.2f}x** open-loop throughput, "
-          f"p99 at **{sv['p99_vs_server']:.2f}x** the legacy server's, "
-          f"bit_exact={sv['bit_exact']}."
-          + (f" ({note})\n" if note else "\n"))
-
-    # ----------------------------------------------------------- large table
-    if large:
-        w("\n## Appendix: Table 3/4 large-design convergence\n")
-        w("| IFM ch | RTL LUT-analog bytes | HLS temp bytes | RTL FF bytes |")
+        return
+    for title, mod in (("NID-MLP", nid_mlp), ("CNV (quick, xnor)", cnv_bnn)):
+        sched = getattr(mod, "TUNED_SCHEDULES", {})
+        node_rows = [(k, v) for k, v in sched.items()
+                     if not k.startswith("engine|")]
+        if not node_rows:
+            continue
+        w(f"\n### {title}: per-layer heuristic vs tuned schedule\n")
+        w("| cache key (device\\|op\\|mode\\|N\\|K\\|epilogue\\|px) | "
+          "tuned blocks (m, n, k-step/rows) | backend | node speedup |")
         w("|---|---|---|---|")
-        for r in large:
-            w(f"| {r['value']} | {r['rtl_lut_bytes']} | {r['hls_temp_bytes']} "
-              f"| {r['rtl_ff_bytes']} |")
+        for key, v in node_rows:
+            if "|conv" in key:
+                kk = f"rt={v.get('rows_per_tile', 'auto')}"
+            elif "xnor" in key:
+                kk = v["block_kw"]
+            else:
+                kk = v["block_k"]
+            w(f"| `{key}` | ({v['block_m']}, {v['block_n']}, {kk}) "
+              f"| {v['backend']} | {v['speedup']:.2f}x |")
+        for key, v in [(k, v) for k, v in sched.items()
+                       if k.startswith("engine|")]:
+            w(f"\nEngine-level: microbatch tile {v['microbatch']} "
+              f"(tuned at batch {v['batch']}, {v['speedup']:.2f}x over "
+              f"the heuristic plan).")
+        w("")
+
+
+def section_build_reports(w):
+    reports = sorted(glob.glob("experiments/build/*_build_report.json"))
+    if not reports:
+        return
+    w("\n## Build pipeline (`repro.build`) — step reports\n")
+    w("Every accelerator is produced by one "
+      "`repro.build.build(graph, target=...)` call running a FINN-style "
+      "list of named steps (lower → finalize → fold → fuse_epilogues → "
+      "fuse_swu → tune → dataflow → engine [→ calibrate]), each graph "
+      "rewrite verified bit-exact against the reference interpreter on "
+      "a probe batch. The BuildReport below is the software analog of "
+      "the paper's per-design resource/synthesis tables (field-by-field "
+      "schema: docs/formats.md).\n")
+    for path in reports:
+        rep = _load(path)
+        w(f"\n### `{rep['name']}` (target `{rep['target']}`)\n")
+        w("| step | wall s | verified | graph ops after |")
+        w("|---|---|---|---|")
+        for s in rep["steps"]:
+            ops = ", ".join(f"{k}×{v}" for k, v in sorted(s["ops"].items()))
+            ver = {True: "bit-exact", None: "—"}.get(s["verified"], "FAIL")
+            w(f"| {s['name']} | {s['wall_s']:.3f} | {ver} | {ops} |")
+        if rep.get("nodes"):
+            w("\n| stage | op | N | K | PE | SIMD | cycles | LUT-analog B "
+              "| BRAM-analog B | tuned |")
+            w("|---|---|---|---|---|---|---|---|---|---|")
+            for n in rep["nodes"]:
+                w(f"| {n['name']} | {n['op']} | {n['n']} | {n['k']} "
+                  f"| {n['pe']} | {n['simd']} | {n['cycles']} "
+                  f"| {n['lut_bytes']} | {n['bram_bytes']} "
+                  f"| {'yes' if n['tuned'] else 'no'} |")
+        pred, meas = rep.get("predicted_interval_s"), rep.get("measured_interval_s")
+        line = (f"\nSteady-state interval: predicted "
+                f"{pred * 1e6:.3f} µs (nominal 200 MHz)" if pred else "\n")
+        if meas:
+            line += (f", measured {meas * 1e6:.1f} µs "
+                     f"({rep['cycle_time_source']} cycle time)")
+        tune = rep.get("tune", {})
+        if tune.get("mode", "off") != "off":
+            line += (f"; autotune `{tune['mode']}`: "
+                     f"{tune.get('cache_hits', 0)} cache hits, "
+                     f"{tune.get('cache_misses', 0)} misses")
+        w(line + f". Total build wall-clock {rep['total_wall_s']:.2f} s.")
+
+
+def section_serving(w):
+    sv = _load("experiments/bench/serving_load.json")
+    if not sv:
+        return
+    w("\n## Serving load — continuous batching vs submit/flush\n")
+    w("`repro.serving` fronts the fused engine with a bounded admission "
+      "queue, a continuous batcher (flush on bucket-fill / pipeline-idle "
+      "/ deadline-slack, the budget derived from "
+      "`DataflowSchedule.steady_state_interval` via "
+      "`dataflow.interval_seconds` with the measured cycle time), and a "
+      "multi-replica pool (params `device_put` per device, least-loaded "
+      "async dispatch).  `python -m benchmarks.serving_load` drives it "
+      "and the legacy cadence-flushed `EngineServer` with the same "
+      "open-loop Poisson arrivals; the committed record is CI-gated on "
+      ">=1.0x throughput (`min_speedup`) AND strictly-better p99 "
+      "(`lower_is_better: p99_vs_server`, ceiling 1.0).\n")
+    w(f"Open-loop Poisson on `{sv['config']}` ({sv['requests']} requests "
+      f"at {sv['rate_hz']:.0f}/s, SLO {sv['slo_ms']:.0f} ms, buckets "
+      f"{sv['buckets']}):\n")
+    w("| metric | continuous (`repro.serving`) | legacy `EngineServer` |")
+    w("|---|---|---|")
+    w(f"| p50 latency | {sv['serving_p50_ms']:.2f} ms "
+      f"| {sv['server_p50_ms']:.2f} ms |")
+    w(f"| p99 latency | {sv['serving_p99_ms']:.2f} ms "
+      f"| {sv['server_p99_ms']:.2f} ms |")
+    w(f"| deadline miss rate | {sv['serving_deadline_miss_rate']:.1%} "
+      f"| {sv['server_deadline_miss_rate']:.1%} |")
+    w(f"| open-loop completion | {sv['serving_samples_per_s']:.0f} "
+      f"samples/s | {sv['server_samples_per_s']:.0f} samples/s |")
+    w(f"| closed-loop saturation | "
+      f"{sv['closed_loop_serving_samples_per_s']:.0f} samples/s | "
+      f"{sv['closed_loop_server_samples_per_s']:.0f} samples/s |")
+    note = sv.get("claim_note")
+    w(f"\nCommitted claim: **{sv['speedup']:.2f}x** open-loop throughput, "
+      f"p99 at **{sv['p99_vs_server']:.2f}x** the legacy server's, "
+      f"bit_exact={sv['bit_exact']}."
+      + (f" ({note})\n" if note else "\n"))
+
+
+def section_appendix(w, sweep):
+    large = sweep.get("large") if sweep else None
+    if not large:
+        return
+    w("\n## Appendix: Table 3/4 large-design convergence\n")
+    w("| IFM ch | RTL LUT-analog bytes | HLS temp bytes | RTL FF bytes |")
+    w("|---|---|---|---|")
+    for r in large:
+        w(f"| {r['value']} | {r['rtl_lut_bytes']} "
+          f"| {r.get('hls_temp_bytes', '—')} | {r['rtl_ff_bytes']} |")
+
+
+def main():
+    sweep = _load("experiments/bench/resource_sweep.json")
+    crit = _load("experiments/bench/critical_path.json")
+    synth = _load("experiments/bench/synthesis_time.json")
+    hm = _load("experiments/bench/heatmap.json")
+    nid = _load("experiments/bench/nid_mlp.json")
+    explores = sorted(glob.glob("experiments/explore/*_explore.json"))
+    explore = _load(explores[0]) if explores else None
+
+    figs = {
+        "resource": fig_resource_curve(sweep),
+        "heatmap": fig_heatmap(hm),
+        "interval": fig_interval(explore),
+        "synthesis": fig_synthesis(synth, explore),
+    }
+
+    doc = []
+    w = doc.append
+    w("# EXPERIMENTS\n")
+    w("Rendered from committed artifacts by `scripts/make_experiments.py` — "
+      "CI regenerates this file and the figures and fails on drift. To "
+      "refresh the underlying records:\n")
+    w("```\npython -m benchmarks.run --out-dir experiments/bench\n"
+      "python -m repro.explore --config nid_mlp --quick\n"
+      "python scripts/make_experiments.py\n```\n")
+    w("Hardware model: TPU v5e — 197 TFLOP/s bf16 (394 TOP/s int8), "
+      "819 GB/s HBM, 16 GB HBM/chip; numbers in this file are measured on "
+      "the CPU interpret path (correctness + structure, not TPU "
+      "projections). Metric mapping: DESIGN.md (LUT→VMEM working set, "
+      "FF→accumulator state, BRAM→weight store, synthesis time→compile/"
+      "tune wall-clock).\n")
+
+    section_claims(w, sweep, crit, synth, nid)
+    section_explore(w, explore, figs)
+    section_figures(w, figs, sweep, hm)
+    section_autotune(w)
+    section_build_reports(w)
+    section_serving(w)
+    section_appendix(w, sweep)
 
     with open("EXPERIMENTS.md", "w") as f:
         f.write("\n".join(doc) + "\n")
-    print(f"EXPERIMENTS.md written ({len(doc)} blocks)")
+    n_figs = sum(1 for p in figs.values() if p)
+    print(f"EXPERIMENTS.md written ({len(doc)} blocks, {n_figs} figures)")
 
 
 if __name__ == "__main__":

@@ -68,6 +68,13 @@ class BuildReport:
     nodes: list[NodeReport] = dataclasses.field(default_factory=list)
     schedule: dict = dataclasses.field(default_factory=dict)
     tune: dict = dataclasses.field(default_factory=dict)
+    # design-space exploration (repro.explore): when this build is one point
+    # of a sweep, ``sweep`` identifies the point (grid coordinates + the
+    # realized per-node foldings) and ``calibration`` carries the fitted
+    # cycle time + per-node model-error records the explorer attributed to
+    # this design.  Empty dicts for standalone builds.
+    sweep: dict = dataclasses.field(default_factory=dict)
+    calibration: dict = dataclasses.field(default_factory=dict)
     predicted_interval_s: float | None = None
     measured_interval_s: float | None = None
     cycle_time_source: str = "nominal"  # "nominal" | "measured"
@@ -99,6 +106,7 @@ class BuildReport:
             "measured_interval_s": self.measured_interval_s,
             "tune": dict(self.tune),
             "total_wall_s": round(self.total_wall_s, 4),
+            **({"sweep_point": self.sweep.get("point_id")} if self.sweep else {}),
         }
 
     # ----------------------------------------------------------------- (de)ser

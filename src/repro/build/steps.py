@@ -215,20 +215,9 @@ def step_tune(state: BuildState) -> None:
     # run_pipeline seeds state.cache whenever cfg.tune != "off"; the cache
     # selection policy lives there alone
     kwargs = dict(cfg.tune_kwargs or {})
-    device = kwargs.get("device")
-    hits = misses = 0
-    shape = None
-    for node in state.graph:
-        in_shape = shape
-        shape = ir.propagate(shape, node)
-        if node.op not in ("mvu", "conv_mvu") or "mvu" not in node.params:
-            continue
-        key = autotune.node_key(
-            node.attrs["config"],
-            epilogue=autotune.epilogue_form(node.params["mvu"]),
-            n_pixels=ir.n_pixels(shape), device=device,
-            op=autotune.op_tag(node, in_shape))
-        hits, misses = (hits + 1, misses) if key in state.cache else (hits, misses + 1)
+    keys = autotune.graph_node_keys(state.graph, device=kwargs.get("device"))
+    hits = sum(1 for key in keys if key in state.cache)
+    misses = len(keys) - hits
     state.graph = autotune.tune_graph(
         state.graph, cache=state.cache, mode=cfg.tune, **kwargs)
     state.report.tune.update(

@@ -5,7 +5,10 @@ Layers (IFMch -> OFMch, PE, SIMD): 600->64 (64,50), 64->64 (16,32),
 64->64 (16,32), 64->1 (1,8).
 """
 
+import numpy as np
+
 from repro.core.folding import Folding
+from repro.core.ir import Graph, Node
 
 # (in_features K, out_features N, PE, SIMD) per layer, from Table 6
 LAYERS = [
@@ -20,6 +23,31 @@ INPUT_BITS = 2
 
 def foldings() -> list[Folding]:
     return [Folding(pe, simd) for (_, _, pe, simd) in LAYERS]
+
+
+def build_graph(seed: int = 0) -> Graph:
+    """Table 6 MLP as a RAW IR chain (linear + bn + quant_act with random
+    trained-like weights) -- ``repro.build.build`` does the lowering.  The
+    benchmarks, examples, and the design-space explorer all share this one
+    definition of the workload."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed)
+    dims = [k for (k, _, _, _) in LAYERS] + [LAYERS[-1][1]]
+    g: Graph = [Node("input", "in", {"shape": (dims[0],), "bits": INPUT_BITS})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = (rng.normal(0, 1, (n, k)) / np.sqrt(k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("batchnorm", f"bn{i}", {}, {
+                "gamma": jnp.asarray(rng.uniform(0.5, 1.5, n).astype(np.float32)),
+                "beta": jnp.asarray(rng.uniform(-0.5, 0.5, n).astype(np.float32)),
+                "mean": jnp.asarray(rng.normal(0, 1, n).astype(np.float32)),
+                "var": jnp.asarray(rng.uniform(0.5, 2, n).astype(np.float32)),
+            }))
+            g.append(Node("quant_act", f"act{i}",
+                          {"bits": INPUT_BITS, "act_scale": 1.0}))
+    return g
 
 
 # Committed autotune results (repro.core.autotune): winners of the empirical

@@ -104,6 +104,30 @@ def node_key(cfg: MVUConfig, *, epilogue: str = "raw", n_pixels: int = 1,
     ])
 
 
+def graph_node_keys(graph: Graph, *, device: str | None = None) -> list[str]:
+    """Schedule-cache keys for every tunable node of a lowered graph.
+
+    One key per finalized ``mvu``/``conv_mvu`` node, in chain order -- the
+    exact keys :func:`tune_graph` will look up (same shape propagation,
+    same epilogue/op tagging).  The build pipeline's cache-hit accounting
+    and the design-space explorer's warm-sweep assertions both consume
+    this instead of re-deriving the key recipe.
+    """
+    keys: list[str] = []
+    shape = None
+    for node in graph:
+        in_shape = shape
+        shape = ir.propagate(shape, node)
+        if node.op not in ("mvu", "conv_mvu") or "mvu" not in node.params:
+            continue
+        keys.append(node_key(
+            node.attrs["config"],
+            epilogue=epilogue_form(node.params["mvu"]),
+            n_pixels=ir.n_pixels(shape), device=device,
+            op=op_tag(node, in_shape)))
+    return keys
+
+
 def cycle_time_key(device: str | None = None) -> str:
     """Cache key for the measured wall-clock seconds per schedule cycle.
 

@@ -1,0 +1,47 @@
+"""``repro.explore``: cached design-space exploration with paper-figure parity.
+
+The paper sweeps every Table 2 configuration across PE/SIMD foldings and
+reads resource, timing, and synthesis-time curves off the reports; this
+package is that experimental loop over the ``repro.build`` pipeline --
+sweep grid, Pareto frontier, whole-sweep resource-model calibration, and
+the cold/warm autotune-cache phase (the synthesis-time-cache analog).
+
+    PYTHONPATH=src python -m repro.explore --config nid_mlp --quick
+
+writes ``experiments/explore/nid_mlp_quick_explore.json``; the committed
+copy is what ``scripts/make_experiments.py`` renders and the regression
+gate checks.
+"""
+
+from repro.explore.explorer import (
+    PARETO_MAXIMIZE,
+    PARETO_MINIMIZE,
+    ExploreConfig,
+    explore,
+    load_record,
+    save_record,
+)
+from repro.explore.grid import (
+    LayerShape,
+    SweepPoint,
+    clamp_folding,
+    layer_shapes,
+    sweep_grid,
+)
+from repro.explore.pareto import dominates, pareto_front
+
+__all__ = [
+    "ExploreConfig",
+    "LayerShape",
+    "PARETO_MAXIMIZE",
+    "PARETO_MINIMIZE",
+    "SweepPoint",
+    "clamp_folding",
+    "dominates",
+    "explore",
+    "layer_shapes",
+    "load_record",
+    "pareto_front",
+    "save_record",
+    "sweep_grid",
+]

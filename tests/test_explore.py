@@ -1,0 +1,299 @@
+"""repro.explore tests: sweep-grid construction (divisor clamping, dedup,
+stable point ids), Pareto dominance/frontier properties (hypothesis when
+available), calibration math on synthetic measurements, and one 2x2
+end-to-end sweep on a tiny MLP with cache-hit accounting + record
+round-trip asserted."""
+
+import json
+import math
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import resource_model
+from repro.core.folding import Folding, divisors
+from repro.core.ir import Node
+from repro.explore import (
+    ExploreConfig,
+    LayerShape,
+    PARETO_MAXIMIZE,
+    PARETO_MINIMIZE,
+    clamp_folding,
+    dominates,
+    explore,
+    load_record,
+    pareto_front,
+    sweep_grid,
+)
+
+
+def _mlp_graph(dims=(24, 16, 8), bits=2, seed=3):
+    rng = np.random.default_rng(seed)
+    g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("quant_act", f"act{i}", {"bits": bits, "act_scale": 1.0}))
+    return g
+
+
+SHAPES = [LayerShape("fc0.mvu", 16, 24, 1), LayerShape("fc1.mvu", 8, 16, 1)]
+
+
+# ------------------------------------------------------------------- grid
+def test_clamp_folding_largest_divisor_at_or_under_target():
+    f = clamp_folding(16, 24, 5, 9)
+    assert f == Folding(4, 8)  # divisors(16) <= 5 -> 4; divisors(24) <= 9 -> 8
+    assert clamp_folding(16, 24, 1, 1) == Folding(1, 1)
+    # targets beyond the layer cap at the full dimension
+    assert clamp_folding(16, 24, 999, 999) == Folding(16, 24)
+
+
+def test_sweep_grid_points_are_legal_and_deduplicated():
+    pts = sweep_grid(SHAPES, (1, 4, 16), (1, 8, 24))
+    assert pts, "grid must not be empty"
+    seen = set()
+    for pt in pts:
+        assert len(pt.foldings) == len(SHAPES)
+        for shape, fold in zip(SHAPES, pt.foldings):
+            assert shape.n % fold.pe == 0
+            assert shape.k % fold.simd == 0
+            assert fold.pe in divisors(shape.n)
+        key = tuple((f.pe, f.simd) for f in pt.foldings)
+        assert key not in seen, "duplicate realized design survived dedup"
+        seen.add(key)
+
+
+def test_sweep_grid_dedup_keeps_first_coordinate_id():
+    # both 16 and 999 clamp to the same full-size folding on every layer:
+    # the first grid coordinate must own the merged point
+    pts = sweep_grid(SHAPES, (16, 999), (24, 999))
+    ids = [p.point_id for p in pts]
+    assert "pe16_simd24" in ids
+    assert not any("999" in i for i in ids)
+
+
+def test_sweep_grid_default_axes_cover_small_and_full_designs():
+    pts = sweep_grid(SHAPES)
+    folds = {tuple((f.pe, f.simd) for f in p.foldings) for p in pts}
+    assert ((1, 1), (1, 1)) in folds  # fully folded corner
+    assert ((16, 24), (8, 16)) in folds  # fully unfolded corner
+
+
+def test_sweep_grid_empty_shapes_raises():
+    with pytest.raises(ValueError):
+        sweep_grid([])
+
+
+# ----------------------------------------------------------------- pareto
+def test_dominates_requires_strict_improvement():
+    a = {"samples_per_s": 10.0, "lut_bytes": 5}
+    assert not dominates(a, dict(a), maximize=("samples_per_s",),
+                         minimize=("lut_bytes",))
+    b = {"samples_per_s": 10.0, "lut_bytes": 6}
+    assert dominates(a, b, maximize=("samples_per_s",), minimize=("lut_bytes",))
+    assert not dominates(b, a, maximize=("samples_per_s",),
+                         minimize=("lut_bytes",))
+
+
+def test_pareto_front_drops_dominated_keeps_duplicates():
+    pts = [
+        {"samples_per_s": 10.0, "lut_bytes": 5},   # frontier
+        {"samples_per_s": 10.0, "lut_bytes": 5},   # exact duplicate: kept
+        {"samples_per_s": 9.0, "lut_bytes": 6},    # dominated by both
+        {"samples_per_s": 20.0, "lut_bytes": 50},  # frontier (fast, big)
+    ]
+    front = pareto_front(pts, maximize=("samples_per_s",),
+                         minimize=("lut_bytes",))
+    assert front == [0, 1, 3]
+
+
+def test_pareto_missing_key_is_worst_case():
+    good = {"samples_per_s": 1.0, "lut_bytes": 1}
+    hole = {"lut_bytes": 1}
+    assert dominates(good, hole, maximize=("samples_per_s",),
+                     minimize=("lut_bytes",))
+    front = pareto_front([good, hole], maximize=("samples_per_s",),
+                         minimize=("lut_bytes",))
+    assert front == [0]
+
+
+def test_pareto_front_property_no_member_dominated():
+    # deterministic pseudo-random clouds; hypothesis variant below
+    rng = np.random.default_rng(7)
+    for _ in range(20):
+        pts = [{"samples_per_s": float(rng.integers(1, 50)),
+                "lut_bytes": float(rng.integers(1, 50)),
+                "ff_bytes": float(rng.integers(1, 50))}
+               for _ in range(rng.integers(1, 30))]
+        front = pareto_front(pts, maximize=("samples_per_s",),
+                             minimize=("lut_bytes", "ff_bytes"))
+        assert front  # non-empty input -> non-empty frontier
+        members = set(front)
+        for i in front:
+            assert not any(dominates(pts[j], pts[i],
+                                     maximize=("samples_per_s",),
+                                     minimize=("lut_bytes", "ff_bytes"))
+                           for j in range(len(pts)))
+        # every non-member is dominated by some frontier member
+        for i, p in enumerate(pts):
+            if i not in members:
+                assert any(dominates(pts[j], p,
+                                     maximize=("samples_per_s",),
+                                     minimize=("lut_bytes", "ff_bytes"))
+                           for j in front)
+
+
+def test_pareto_front_hypothesis_property():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    point = st.fixed_dictionaries({
+        "samples_per_s": st.integers(0, 8).map(float),
+        "lut_bytes": st.integers(0, 8).map(float),
+    })
+
+    @hyp.given(st.lists(point, min_size=1, max_size=24))
+    @hyp.settings(deadline=None, max_examples=80)
+    def prop(pts):
+        front = pareto_front(pts, maximize=("samples_per_s",),
+                             minimize=("lut_bytes",))
+        assert front == sorted(front)
+        assert front
+        for i in front:
+            assert not any(dominates(pts[j], pts[i],
+                                     maximize=("samples_per_s",),
+                                     minimize=("lut_bytes",))
+                           for j in range(len(pts)))
+        for i in range(len(pts)):
+            if i not in front:
+                assert any(dominates(pts[j], pts[i],
+                                     maximize=("samples_per_s",),
+                                     minimize=("lut_bytes",))
+                           for j in front)
+
+    prop()
+
+
+# ------------------------------------------------------------ calibration
+def test_fit_cycle_time_recovers_exact_linear_data():
+    cycles = [1, 10, 100, 1000]
+    s = 2.5e-7
+    seconds = [c * s for c in cycles]
+    fit = resource_model.fit_cycle_time(cycles, seconds)
+    assert math.isclose(fit, s, rel_tol=1e-12)
+    errors = resource_model.cycle_model_errors(cycles, seconds)
+    assert all(abs(e) < 1e-9 for e in errors)
+    summary = resource_model.error_summary(errors)
+    assert summary["n"] == 4
+    assert summary["p90_abs"] < 1e-9
+
+
+def test_fit_cycle_time_is_least_squares_not_mean_of_ratios():
+    # one large-cycle point with slope 2, one tiny point with slope 1000:
+    # least squares must follow the large point (sum(c*m)/sum(c^2)),
+    # not average the per-point ratios
+    cycles = [1000, 1]
+    seconds = [2000.0, 1000.0]
+    fit = resource_model.fit_cycle_time(cycles, seconds)
+    expected = (1000 * 2000.0 + 1 * 1000.0) / (1000**2 + 1)
+    assert math.isclose(fit, expected, rel_tol=1e-12)
+    assert abs(fit - 2.0) < 0.01  # dominated by the big point
+
+
+def test_cycle_model_errors_signed_and_summary_percentiles():
+    # predicted = c * 1.0; measured chosen for exact signed errors
+    cycles = [1, 1, 1, 1]
+    seconds = [0.5, 1.0, 2.0, 4.0]  # errors: +1.0, 0.0, -0.5, -0.75
+    errors = resource_model.cycle_model_errors(cycles, seconds, s_per_cycle=1.0)
+    assert errors == pytest.approx([1.0, 0.0, -0.5, -0.75])
+    summary = resource_model.error_summary(errors)
+    assert summary["max_abs"] == pytest.approx(1.0)
+    assert summary["mean_signed"] == pytest.approx((1.0 - 0.5 - 0.75) / 4)
+    assert 0.0 < summary["p50_abs"] <= 1.0
+
+
+def test_fit_cycle_time_rejects_degenerate_input():
+    with pytest.raises(ValueError):
+        resource_model.fit_cycle_time([], [])
+    with pytest.raises(ValueError):
+        resource_model.fit_cycle_time([1, 2], [1.0])
+    with pytest.raises(ValueError):
+        resource_model.cycle_model_errors([1], [0.0], s_per_cycle=1.0)
+
+
+# ------------------------------------------------------------- end-to-end
+@pytest.fixture(scope="module")
+def small_sweep(tmp_path_factory):
+    out = tmp_path_factory.mktemp("explore")
+    cfg = ExploreConfig(
+        graph=_mlp_graph(), name="tiny",
+        build_overrides=dict(mode="standard", weight_bits=4, act_bits=2),
+        pe_targets=(1, 8), simd_targets=(1, 16),
+        batch=16, reps=1, out_dir=str(out),
+        tune_kwargs={"reps": 1, "max_measure": 1, "sample_m": 16},
+    )
+    return explore(cfg)
+
+
+def test_explore_sweep_points_bit_exact_and_pareto(small_sweep):
+    rec = small_sweep
+    assert rec["n_points"] == len(rec["points"]) == 4  # 2x2, no collapses
+    assert rec["bit_exact"] is True
+    ids = {p["point_id"] for p in rec["points"]}
+    assert ids == {"pe1_simd1", "pe1_simd16", "pe8_simd1", "pe8_simd16"}
+    front = set(rec["pareto_front"])
+    assert front <= ids and front
+    for p in rec["points"]:
+        assert p["pareto"] == (p["point_id"] in front)
+        assert p["interval_cycles"] >= 1
+        assert p["samples_per_s"] > 0
+        for key in PARETO_MAXIMIZE + PARETO_MINIMIZE:
+            assert key in p
+    # the folding axis survived the sweep: the fully-folded point runs more
+    # cycles than the unfolded one (tune="off" keeps foldings distinct)
+    by_id = {p["point_id"]: p for p in rec["points"]}
+    assert (by_id["pe1_simd1"]["interval_cycles"]
+            > by_id["pe8_simd16"]["interval_cycles"])
+    assert by_id["pe1_simd1"]["lut_bytes"] <= by_id["pe8_simd16"]["lut_bytes"]
+
+
+def test_explore_calibration_attached_and_gated(small_sweep):
+    rec = small_sweep
+    cal = rec["calibration"]
+    assert cal["s_per_cycle"] > 0
+    assert cal["samples"] == sum(len(p["nodes"]) for p in rec["points"])
+    assert set(cal["per_node"]) == {"fc0.mvu", "fc1.mvu"}
+    for p in rec["points"]:
+        for node in p["nodes"]:
+            assert node["predicted_s"] == pytest.approx(
+                node["cycles"] * cal["s_per_cycle"])
+            assert node["model_error"] is not None
+    # gate contract: ceiling committed alongside the measured value
+    assert rec["ceiling_only"] == ["model_error_p90"]
+    assert rec["model_error_p90"] == pytest.approx(cal["summary"]["p90_abs"])
+    assert rec["max_model_error_p90"] >= rec["model_error_p90"] + 0.5
+
+
+def test_explore_cache_phase_hit_accounting(small_sweep):
+    cache = small_sweep["cache"]
+    n_mvu = 2  # fc0.mvu, fc1.mvu
+    assert cache["cold_misses"] == n_mvu  # empty cache: every node measured
+    assert cache["warm_hits"] == n_mvu  # warm replay: pure lookup
+    assert cache["warm_misses"] == 0
+    assert cache["cold_wall_s"] > 0 and cache["warm_wall_s"] > 0
+    assert small_sweep["floor_only"] == ["cache_speedup"]
+    assert small_sweep["cache_speedup"] == pytest.approx(
+        cache["cold_wall_s"] / cache["warm_wall_s"])
+
+
+def test_explore_record_round_trips_and_is_json_clean(small_sweep):
+    path = small_sweep["path"]
+    loaded = load_record(path)
+    assert "path" not in loaded  # runtime-only key stays out of the file
+    drop = {k: v for k, v in small_sweep.items() if k != "path"}
+    assert loaded == json.loads(json.dumps(drop))  # JSON-clean, lossless
+    assert loaded["grid"]["layers"][0]["name"] == "fc0.mvu"
+    assert loaded["points"][0]["foldings"]  # [[pe, simd], ...] survived
