@@ -54,14 +54,11 @@ def conv_memory_model(engine: FusedEngine, batch: int, microbatch: int) -> dict:
     microbatch -- the line-buffer residency.
     """
     im2col = fused = 0
-    shape = None
-    for node in engine.graph:
-        in_shape = shape
-        shape = ir.propagate(shape, node)
+    for node, ins, out_shape in ir.io_shapes(engine.graph):
         if node.op != "conv_mvu":
             continue
-        h, w, c = in_shape
-        oh, ow, _ = shape
+        h, w, c = ins[0]
+        oh, ow, _ = out_shape
         kd = node.attrs["kernel"]
         pad = node.attrs["pad"]
         k = kd * kd * c

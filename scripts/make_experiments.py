@@ -557,6 +557,12 @@ def section_build_reports(w):
     for path in reports:
         rep = _load(path)
         w(f"\n### `{rep['name']}` (target `{rep['target']}`)\n")
+        edges = rep.get("edges") or []
+        srcs = [s for s, _ in edges]
+        if any(srcs.count(s) > 1 for s in set(srcs)):
+            # a branched (fan-out) graph: show the full edge list
+            w("Topology (DAG): " +
+              ", ".join(f"`{s}->{d}`" for s, d in edges) + "\n")
         w("| step | wall s | verified | graph ops after |")
         w("|---|---|---|---|")
         for s in rep["steps"]:
@@ -564,11 +570,12 @@ def section_build_reports(w):
             ver = {True: "bit-exact", None: "—"}.get(s["verified"], "FAIL")
             w(f"| {s['name']} | {s['wall_s']:.3f} | {ver} | {ops} |")
         if rep.get("nodes"):
-            w("\n| stage | op | N | K | PE | SIMD | cycles | LUT-analog B "
-              "| BRAM-analog B | tuned |")
-            w("|---|---|---|---|---|---|---|---|---|---|")
+            w("\n| stage | op | branch | N | K | PE | SIMD | cycles "
+              "| LUT-analog B | BRAM-analog B | tuned |")
+            w("|---|---|---|---|---|---|---|---|---|---|---|")
             for n in rep["nodes"]:
-                w(f"| {n['name']} | {n['op']} | {n['n']} | {n['k']} "
+                w(f"| {n['name']} | {n['op']} | {n.get('branch', 'main')} "
+                  f"| {n['n']} | {n['k']} "
                   f"| {n['pe']} | {n['simd']} | {n['cycles']} "
                   f"| {n['lut_bytes']} | {n['bram_bytes']} "
                   f"| {'yes' if n['tuned'] else 'no'} |")
@@ -584,6 +591,42 @@ def section_build_reports(w):
                      f"{tune.get('cache_hits', 0)} cache hits, "
                      f"{tune.get('cache_misses', 0)} misses")
         w(line + f". Total build wall-clock {rep['total_wall_s']:.2f} s.")
+
+
+def section_residual(w):
+    res = _load("experiments/bench/residual_mlp.json")
+    if not res:
+        return
+    w("\n## Residual graphs — fan-out/fan-in through the DAG IR\n")
+    w("The IR is a DAG, not a chain: nodes carry named input edges, "
+      "elementwise-binary joins (`add`/`sub`/`mul` with per-input scales "
+      "and FINN-style trailing-dim broadcast) merge forked streams, and "
+      "the dataflow schedule balances branch latencies with a skew FIFO "
+      "at each join (`fifo = max(2, ceil(skew / interval))` — the "
+      "software analog of FINN's FIFO sizing at residual joins). "
+      "`benchmarks/residual_mlp.py` proves a skip-connection NID-MLP "
+      "variant end-to-end; `examples/residual_mlp.py` walks the same "
+      "graph through every build target.\n")
+    w("Lowered topology: " +
+      ", ".join(f"`{s}->{d}`" for s, d in res["edges"]) + "\n")
+    w("| claim | value |")
+    w("|---|---|")
+    w(f"| bit-exact (engine vs DAG interpreter, batch {res['batch']}) "
+      f"| {res['bit_exact']} |")
+    w(f"| committed speedup floor | {res['speedup']:.1f}x "
+      f"(min {res['min_speedup']:.1f}x) |")
+    w(f"| steady-state interval | {res['interval_cycles']} cycles "
+      f"(bottleneck `{res['bottleneck']}`) |")
+    w(f"| critical path | {res['critical_path_cycles']} cycles "
+      f"(longest path, not the stage sum) |")
+    for j in res["joins"]:
+        skew = max(j["branch_latency"]) - min(j["branch_latency"])
+        w(f"| join `{j['name']}` | branches {j['branches']}, latencies "
+          f"{j['branch_latency']} (skew {skew}) -> FIFO depth "
+          f"{j['fifo_depth']} |")
+    note = res.get("claim_note")
+    if note:
+        w(f"\n{note[0].upper()}{note[1:]}.\n")
 
 
 def section_serving(w):
@@ -674,6 +717,7 @@ def main():
     section_figures(w, figs, sweep, hm)
     section_autotune(w)
     section_build_reports(w)
+    section_residual(w)
     section_serving(w)
     section_appendix(w, sweep)
 

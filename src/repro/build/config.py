@@ -34,11 +34,17 @@ class VerificationError(BuildError):
 
     The message always names the offending step -- FINN's verification
     steps fail the build the same way, pointing at the transform that
-    broke numerical equivalence.
+    broke numerical equivalence.  When the hook can localize the
+    divergence by re-tracing the graph node-by-node, ``node`` holds the
+    first divergent node's id and ``branch`` its branch path (which arm
+    of a fan-out it sits on), and the message names both.
     """
 
-    def __init__(self, step: str, detail: str):
+    def __init__(self, step: str, detail: str, *,
+                 node: str | None = None, branch: str | None = None):
         self.step = step
+        self.node = node
+        self.branch = branch
         super().__init__(f"verification failed after step {step!r}: {detail}")
 
 

@@ -55,6 +55,11 @@ class NodeReport:
     bram_bytes: int
     backend: str
     tuned: bool
+    # DAG topology: the stage's input streams and which branch path of a
+    # fan-out it sits on ("main" for the trunk).  Defaults keep reports
+    # serialized before the DAG IR loadable.
+    inputs: list = dataclasses.field(default_factory=list)
+    branch: str = "main"
 
 
 @dataclasses.dataclass
@@ -66,6 +71,10 @@ class BuildReport:
     config: dict = dataclasses.field(default_factory=dict)
     steps: list[StepRecord] = dataclasses.field(default_factory=list)
     nodes: list[NodeReport] = dataclasses.field(default_factory=list)
+    # serialized topology: every [producer, consumer] stream edge of the
+    # final graph (chains serialize to the obvious path; fan-out/fan-in
+    # graphs make the branch structure diffable)
+    edges: list = dataclasses.field(default_factory=list)
     schedule: dict = dataclasses.field(default_factory=dict)
     tune: dict = dataclasses.field(default_factory=dict)
     # design-space exploration (repro.explore): when this build is one point

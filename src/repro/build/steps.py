@@ -8,7 +8,7 @@ may also return a plain graph, which replaces ``state.graph``).  The
 built-in steps wrap the module-level passes that every example used to
 hand-sequence:
 
-    validate        ir.validate_chain
+    validate        ir.validate_graph
     lower           lowering.lower_to_mvu
     streamline      lowering.streamline      (not in the defaults; the
                                               QAT flow opts in by name)
@@ -143,7 +143,7 @@ def default_steps(target: str) -> list[str]:
 # ------------------------------------------------------------- built-ins
 @register_step("validate")
 def step_validate(state: BuildState) -> None:
-    ir.validate_chain(state.graph)
+    ir.validate_graph(state.graph)
 
 
 @register_step("lower")
@@ -180,7 +180,11 @@ def step_fold(state: BuildState) -> None:
         state.mark_dirty()
         return
     folds = list(cfg.folding)
-    mvu_nodes = [n for n in state.graph if n.op in ("mvu", "conv_mvu")]
+    # explicit foldings apply in dataflow (topological) order -- identical
+    # to list order for chains; toposorted nodes share their attrs dicts
+    # with state.graph, so the in-place config rewrite reaches it
+    mvu_nodes = [n for n in ir.toposort(state.graph)
+                 if n.op in ("mvu", "conv_mvu")]
     if len(folds) != len(mvu_nodes):
         raise BuildError(
             f"folding override lists {len(folds)} entries but the lowered "
@@ -230,14 +234,14 @@ def step_dataflow(state: BuildState) -> None:
     """Schedule + per-node resource tables into the report (no rewrite)."""
     sched = dataflow.schedule(state.graph)
     state.report.schedule = sched.summary() if sched.stages else {"stages": 0}
+    state.report.edges = ir.edge_list(state.graph)
+    branches = ir.branch_labels(state.graph)
     nodes: list[NodeReport] = []
-    shape = None
-    for node in state.graph:
-        shape = ir.propagate(shape, node)
+    for node, _, out_shape in ir.io_shapes(state.graph):
         if node.op not in ("mvu", "conv_mvu"):
             continue
         mcfg: MVUConfig = node.attrs["config"]
-        px = ir.n_pixels(shape)
+        px = ir.n_pixels(out_shape)
         fold = mcfg.resolved_folding()
         res = MVULayer(mcfg).resources(n_pixels=px)
         nodes.append(NodeReport(
@@ -246,7 +250,9 @@ def step_dataflow(state: BuildState) -> None:
             pe=fold.pe, simd=fold.simd, n_pixels=px, cycles=res.cycles,
             lut_bytes=res.lut_bytes, ff_bytes=res.ff_bytes,
             bram_bytes=res.bram_bytes, backend=mcfg.backend,
-            tuned=mcfg.blocks is not None))
+            tuned=mcfg.blocks is not None,
+            inputs=list(node.inputs),
+            branch=branches.get(node.name, "main")))
     state.report.nodes = nodes
     if sched.stages:
         state.report.predicted_interval_s = (
@@ -310,6 +316,45 @@ def step_calibrate(state: BuildState) -> None:
 
 
 # ------------------------------------------------------------ verification
+def _localize_divergence(state: BuildState, graph: Graph) -> tuple:
+    """Pin a probe-batch divergence to its first bad node and branch path.
+
+    Re-traces ``graph`` and the pinned reference graph node-by-node
+    (``dataflow.trace``) and walks the current graph in dataflow order
+    comparing each node's stream against the reference activation it must
+    reproduce -- fused nodes against the last epilogue node they absorbed
+    (``attrs["fused"]``), conv_mvu nodes against their pre-``fuse_swu``
+    MVU.  Returns ``(detail_suffix, node_name, branch)``; all empty when
+    localization itself fails (the step-level error still raises).
+    """
+    try:
+        ref_env = dataflow.trace(state.ref_graph, state.probe)
+        got_env = dataflow.trace(graph, state.probe)
+        branches = ir.branch_labels(graph)
+    except Exception:
+        return "", None, None
+    for node in ir.toposort(graph):
+        if node.op == "input":
+            continue
+        cands = []
+        fused = node.attrs.get("fused")
+        if fused:
+            cands.append(fused[-1])
+        cands.append(node.name)
+        if ".conv_mvu" in node.name:
+            cands.append(node.name.replace(".conv_mvu", ".mvu"))
+        want = next((ref_env[c] for c in cands if c in ref_env), None)
+        got = got_env.get(node.name)
+        if want is None or got is None:
+            continue
+        want, got = np.asarray(want), np.asarray(got)
+        if got.shape != want.shape or not np.array_equal(got, want):
+            br = branches.get(node.name, "main")
+            return (f"; first divergent node: {node.name!r} on branch "
+                    f"{br!r}", node.name, br)
+    return "", None, None
+
+
 def _executable(graph: Graph) -> bool:
     """Can ``dataflow.execute`` run this graph? (no float conv/linear left,
     every MVU finalized)."""
@@ -354,19 +399,26 @@ def verify_after(state: BuildState, name: str) -> bool | None:
             got = np.asarray(dataflow.execute(state.graph, state.probe))
             if got.shape != state.probe_out.shape or not np.array_equal(
                     got, state.probe_out):
+                suffix, bad_node, branch = _localize_divergence(
+                    state, state.graph)
                 raise VerificationError(
                     name, "graph output diverged from the reference "
                     f"interpreter on a {state.cfg.probe_batch}-sample probe "
-                    "batch")
+                    f"batch{suffix}", node=bad_node, branch=branch)
             verified = True
     if state.engine is not None and not state._engine_verified \
             and state.probe_out is not None:
         state._engine_verified = True
         got = np.asarray(state.engine(state.probe))
         if not np.array_equal(got, state.probe_out):
+            # the engine shares the fused graph's params, so an eager
+            # re-trace of engine.graph localizes the divergent stage
+            suffix, bad_node, branch = _localize_divergence(
+                state, state.engine.graph)
             raise VerificationError(
                 name, "compiled engine diverged from the reference "
-                "interpreter on the probe batch")
+                f"interpreter on the probe batch{suffix}",
+                node=bad_node, branch=branch)
         verified = True
     return verified
 

@@ -114,16 +114,14 @@ def graph_node_keys(graph: Graph, *, device: str | None = None) -> list[str]:
     this instead of re-deriving the key recipe.
     """
     keys: list[str] = []
-    shape = None
-    for node in graph:
-        in_shape = shape
-        shape = ir.propagate(shape, node)
+    for node, ins, out_shape in ir.io_shapes(graph):
         if node.op not in ("mvu", "conv_mvu") or "mvu" not in node.params:
             continue
+        in_shape = ins[0] if ins else None
         keys.append(node_key(
             node.attrs["config"],
             epilogue=epilogue_form(node.params["mvu"]),
-            n_pixels=ir.n_pixels(shape), device=device,
+            n_pixels=ir.n_pixels(out_shape), device=device,
             op=op_tag(node, in_shape)))
     return keys
 
@@ -149,14 +147,12 @@ def engine_key(graph: Graph, *, device: str | None = None) -> str:
     """
     device = device_kind() if device is None else device
     parts = []
-    shape = None
-    for node in graph:
-        in_shape = shape
-        shape = ir.propagate(shape, node)
+    for node, ins, out_shape in ir.io_shapes(graph):
         if node.op in ("mvu", "conv_mvu") and "mvu" in node.params:
             cfg = node.attrs["config"]
+            in_shape = ins[0] if ins else None
             parts.append(node_key(cfg, epilogue=epilogue_form(node.params["mvu"]),
-                                  n_pixels=ir.n_pixels(shape), device="",
+                                  n_pixels=ir.n_pixels(out_shape), device="",
                                   op=op_tag(node, in_shape)))
     digest = hashlib.sha1("~".join(parts).encode()).hexdigest()[:12]
     return f"engine|{device}|{digest}"
@@ -427,7 +423,7 @@ def tune_node(
     n_pixels = 1
     if node.op == "conv_mvu":
         conv = {k: node.attrs[k] for k in ("kernel", "stride", "pad")}
-        out_shape = ir.propagate(in_shape, node)
+        out_shape = ir.propagate(node, in_shape)
         n_pixels = ir.n_pixels(out_shape)
     t = params.thresholds
     n_thresh = 0 if t is None else int(t.shape[-1])
@@ -515,17 +511,15 @@ def tune_graph(
     if mode not in ("cache", "auto"):
         raise ValueError(f"tune mode must be 'cache' or 'auto', got {mode!r}")
     cache = cache if cache is not None else default_cache()
-    out: Graph = []
-    shape = None
-    for node in graph:
-        in_shape = shape
-        shape = ir.propagate(shape, node)
+    out: Graph = ir.Graph()
+    for node, ins, out_shape in ir.io_shapes(graph):
         if node.op not in ("mvu", "conv_mvu") or "mvu" not in node.params:
             out.append(node)
             continue
+        in_shape = ins[0] if ins else None
         cfg: MVUConfig = node.attrs["config"]
         key = node_key(cfg, epilogue=epilogue_form(node.params["mvu"]),
-                       n_pixels=ir.n_pixels(shape), device=device,
+                       n_pixels=ir.n_pixels(out_shape), device=device,
                        op=op_tag(node, in_shape))
         entry = cache.get(key)
         if entry is None and mode == "auto":
@@ -537,7 +531,7 @@ def tune_graph(
             continue
         out.append(Node(node.op, node.name,
                         {**node.attrs, "config": apply_entry(cfg, entry)},
-                        node.params))
+                        node.params, inputs=node.inputs))
     return out
 
 
@@ -546,9 +540,11 @@ def synth_input(graph: Graph, batch: int, seed: int = 0):
     """Random integer activations matching the graph's input node."""
     import jax.numpy as jnp
 
-    head = graph[0]
-    if head.op != "input":
-        raise ValueError("graph must start with an input node")
+    heads = [n for n in graph if n.op == "input"]
+    if len(heads) != 1:
+        raise ValueError(
+            f"graph must have exactly one input node, found {len(heads)}")
+    head = heads[0]
     shape = tuple(head.attrs["shape"])
     bits = head.attrs.get("bits", 1)
     rng = np.random.default_rng(seed)

@@ -34,11 +34,34 @@ class StageInfo:
     fifo_depth: int
     n_pixels: int = 1  # output pixels per sample (conv stages; 1 for dense)
     block_m: int = 128  # resident M tile of the stage's kernel
+    branch: str = "main"  # which arm of a fork the stage sits on
+
+
+@dataclasses.dataclass
+class JoinInfo:
+    """One fan-in point (elementwise-binary node) of a branched graph.
+
+    FINN sizes the FIFO on the *shorter* arm of a residual join to absorb
+    the latency skew between the two branches -- otherwise the early arm
+    stalls the whole pipeline while the long arm drains.  ``fifo_depth`` is
+    that balance depth in steady-state bursts: the branch latency
+    difference divided by the pipeline's initiation interval (how many
+    extra results the fast arm produces before the slow arm's first one
+    lands), floored at the usual decoupling minimum of 2."""
+
+    name: str
+    branches: tuple[str, str]  # branch label of each joined input
+    branch_latency: tuple[int, int]  # critical-path cycles into each input
+    fifo_depth: int
 
 
 @dataclasses.dataclass
 class DataflowSchedule:
     stages: list[StageInfo]
+    joins: list[JoinInfo] = dataclasses.field(default_factory=list)
+    # critical-path latency through the DAG (equals the stage sum on
+    # chains); None -> fall back to the chain-era sum
+    critical_path_cycles: int | None = None
 
     @property
     def bottleneck(self) -> StageInfo:
@@ -51,10 +74,12 @@ class DataflowSchedule:
 
     @property
     def latency_cycles(self) -> int:
+        if self.critical_path_cycles is not None:
+            return self.critical_path_cycles
         return sum(s.cycles for s in self.stages)
 
     def summary(self) -> dict:
-        return {
+        out = {
             "stages": len(self.stages),
             "latency_cycles": self.latency_cycles,
             "interval_cycles": self.steady_state_interval,
@@ -62,6 +87,13 @@ class DataflowSchedule:
             "total_bram_bytes": sum(s.resources.bram_bytes for s in self.stages),
             "total_lut_bytes": sum(s.resources.lut_bytes for s in self.stages),
         }
+        if self.joins:
+            out["joins"] = [{
+                "name": j.name, "branches": list(j.branches),
+                "branch_latency": list(j.branch_latency),
+                "fifo_depth": j.fifo_depth,
+            } for j in self.joins]
+        return out
 
 
 # The paper's RTL targets a 200 MHz FPGA clock (section 6); with no measured
@@ -97,38 +129,82 @@ def interval_seconds(sched: DataflowSchedule, *, cache=None,
 
 
 def schedule(graph: Graph) -> DataflowSchedule:
-    shape = None
+    info = ir.io_shapes(graph)
+    branches = ir.branch_labels(graph)
     stages: list[StageInfo] = []
-    prev_cycles = None
-    for node in graph:
-        shape = ir.propagate(shape, node)
-        if node.op in ("mvu", "conv_mvu"):
-            cfg: MVUConfig = node.attrs["config"]
-            px = ir.n_pixels(shape)
-            layer = MVULayer(cfg)
-            res = layer.resources(n_pixels=px)
-            # FIFO sizing: enough to absorb one producer burst while the
-            # consumer drains at its own rate (paper 5.3.2's small FIFO).
-            fold = cfg.resolved_folding()
-            burst = fold.pe  # outputs produced per cycle group
-            drain = 1 if prev_cycles is None else max(1, res.cycles // max(prev_cycles, 1))
-            fifo = max(2, burst * min(drain, 8))
-            stages.append(StageInfo(node.name, res.cycles, res, fifo,
-                                    n_pixels=px, block_m=cfg.block_m))
-            prev_cycles = res.cycles
-    return DataflowSchedule(stages)
+    # per-node bookkeeping threaded along edges (the chain era threaded one
+    # running value through list order): nearest upstream MVU stage's cycle
+    # count, and the critical-path latency into each node's output
+    upstream: dict[str, int | None] = {}
+    lat: dict[str, int] = {}
+    for node, _, out_shape in info:
+        ins = node.inputs or ()
+        prevs = [upstream.get(s) for s in ins]
+        prev_cycles = max((p for p in prevs if p is not None), default=None)
+        in_lat = max((lat[s] for s in ins), default=0)
+        if node.op not in ("mvu", "conv_mvu"):
+            upstream[node.name] = prev_cycles
+            lat[node.name] = in_lat
+            continue
+        cfg: MVUConfig = node.attrs["config"]
+        px = ir.n_pixels(out_shape)
+        layer = MVULayer(cfg)
+        res = layer.resources(n_pixels=px)
+        # FIFO sizing: enough to absorb one producer burst while the
+        # consumer drains at its own rate (paper 5.3.2's small FIFO).  At a
+        # fan-in the slowest producer governs the drain ratio.
+        fold = cfg.resolved_folding()
+        burst = fold.pe  # outputs produced per cycle group
+        drain = 1 if prev_cycles is None else max(1, res.cycles // max(prev_cycles, 1))
+        fifo = max(2, burst * min(drain, 8))
+        stages.append(StageInfo(node.name, res.cycles, res, fifo,
+                                n_pixels=px, block_m=cfg.block_m,
+                                branch=branches.get(node.name, "main")))
+        upstream[node.name] = res.cycles
+        lat[node.name] = in_lat + res.cycles
+    # fan-in FIFOs: balance the latency skew between the joined branches
+    # (JoinInfo docstring) against the pipeline's steady-state interval
+    interval = max((s.cycles for s in stages), default=1)
+    joins = [
+        JoinInfo(
+            node.name,
+            tuple(branches.get(s, "main") for s in node.inputs),
+            tuple(lat[s] for s in node.inputs),
+            max(2, -(-abs(lat[node.inputs[0]] - lat[node.inputs[1]])
+                     // max(1, interval))),
+        )
+        for node, _, _ in info if node.op in ir.ELTWISE_OPS
+    ]
+    return DataflowSchedule(stages, joins=joins,
+                            critical_path_cycles=max(lat.values(), default=0))
 
 
 def node_runner(node):
-    """Per-node semantics as ``(params, fn)`` with ``fn(params, x) -> x``.
+    """Per-node semantics as ``(params, fn)`` with ``fn(params, *xs) -> x``.
 
     The eager interpreter (:func:`execute`) and the fused engine
     (``repro.core.engine``) both apply nodes through this single definition,
     so the jit-compiled engine is bit-exact with the behavioural model by
     construction.  ``params`` is the node's traced pytree (or ``None``).
+    Single-input ops take one array; elementwise-binary ops take two.
     """
     if node.op == "input":
         return None, lambda p, x: x
+    if node.op in ir.ELTWISE_OPS:
+        sa, sb = node.attrs.get("scales", (1, 1))
+        opf = {"add": jnp.add, "sub": jnp.subtract, "mul": jnp.multiply}[node.op]
+
+        def run_eltwise(p, a, b):
+            # FINN broadcast semantics on per-sample shapes: align trailing
+            # dims, keeping the batch dim (axis 0) out of the broadcast by
+            # padding singleton dims right after it.
+            rank = max(a.ndim, b.ndim)
+            a2 = a.reshape(a.shape[0], *((1,) * (rank - a.ndim)), *a.shape[1:])
+            b2 = b.reshape(b.shape[0], *((1,) * (rank - b.ndim)), *b.shape[1:])
+            # per-input integer quantization-alignment scales
+            return opf(a2 * sa, b2 * sb)
+
+        return None, run_eltwise
     if node.op == "swu":
         kd, st, pd = node.attrs["kernel"], node.attrs["stride"], node.attrs["pad"]
 
@@ -201,15 +277,44 @@ def node_runner(node):
     raise ValueError(f"unknown op {node.op!r} ({node.name})")
 
 
-def execute(graph: Graph, x: jax.Array) -> jax.Array:
+def trace(graph: Graph, x) -> dict[str, jax.Array]:
+    """Run the graph eagerly and return EVERY node's output, keyed by name.
+
+    This is the DAG interpreter's environment: :func:`execute` reads the
+    sink out of it, and the build pipeline's divergence localizer compares
+    two of them node-by-node to name the branch/node where a rewrite first
+    changed the numbers.  ``x`` is one array when the graph has a single
+    input node, or a ``{input-name: array}`` dict for multi-input graphs.
+    """
+    order = ir.toposort(graph)
+    if isinstance(x, dict):
+        feeds = dict(x)
+    else:
+        heads = [n for n in order if n.op == "input"]
+        if len(heads) != 1:
+            raise ValueError(
+                f"graph has {len(heads)} input nodes; pass a "
+                "{name: array} dict instead of one array")
+        feeds = {heads[0].name: x}
+    env: dict[str, jax.Array] = {}
+    for node in order:
+        params, fn = node_runner(node)
+        if node.op == "input":
+            if node.name not in feeds:
+                raise ValueError(f"no feed for input node {node.name!r}")
+            env[node.name] = fn(params, feeds[node.name])
+        else:
+            env[node.name] = fn(params, *(env[s] for s in node.inputs))
+    return env
+
+
+def execute(graph: Graph, x) -> jax.Array:
     """Run the lowered integer graph on host (behavioural model).
 
     x: for conv nets (B, H, W, C); for MLPs (B, K).  Integer dtypes.
     This is the eager per-node reference; ``repro.core.engine.FusedEngine``
-    compiles the same node chain into one jit'd streaming executable.
+    compiles the same dataflow graph into one jit'd streaming executable.
+    The graph's single sink is the output; branched (fan-out/fan-in) graphs
+    run exactly like chains.
     """
-    cur = x
-    for node in graph:
-        params, fn = node_runner(node)
-        cur = fn(params, cur)
-    return cur
+    return trace(graph, x)[ir.graph_output(graph).name]

@@ -48,7 +48,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.core import dataflow, lowering
+from repro.core import dataflow, ir, lowering
 from repro.core.ir import Graph
 
 
@@ -107,9 +107,15 @@ class FusedEngine:
             if ent is not None:
                 self._tile = max(1, int(ent["microbatch"]))
         self.schedule = dataflow.schedule(self.graph)
-        runners = [dataflow.node_runner(n) for n in self.graph]
+        # stage order is the dataflow (topological) order -- identical to
+        # list order for chains, and the streaming order for branched graphs
+        order = ir.toposort(self.graph)
+        runners = [dataflow.node_runner(n) for n in order]
         self._fns = tuple(fn for _, fn in runners)
         self.params = [p for p, _ in runners]
+        self._names = tuple(n.name for n in order)
+        self._in_names = tuple(n.inputs for n in order)
+        self._out_name = ir.graph_output(self.graph).name
         self._microbatches = microbatches
         self._jit = jax.jit(self._stream, static_argnums=(2,))
 
@@ -148,9 +154,15 @@ class FusedEngine:
 
     # -------------------------------------------------------------- forward
     def _chain(self, params, x):
-        for p, fn in zip(params, self._fns):
-            x = fn(p, x)
-        return x
+        # traced once under jit: the env is a compile-time dict of traced
+        # values, so fan-out reuses one stream and joins consume both arms
+        # inside the same fused program -- no interpreter overhead survives.
+        env: dict = {}
+        for name, ins, p, fn in zip(self._names, self._in_names,
+                                    params, self._fns):
+            args = (x,) if not ins else tuple(env[s] for s in ins)
+            env[name] = fn(p, *args)
+        return env[self._out_name]
 
     def _stream(self, params, x, n_micro: int):
         b = x.shape[0]

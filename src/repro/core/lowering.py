@@ -7,29 +7,58 @@
     apply_folding:  attach rate-balanced Folding to every mvu/conv_mvu node
     apply_schedules: pin empirically tuned kernel schedules from the
                      autotune cache onto every mvu/conv_mvu node
+
+All passes are DAG-aware: patterns match along explicit dataflow edges
+(producer -> sole-consumer paths), not list adjacency, so chains and
+branched (fan-out/fan-in) graphs rewrite through the same code.  Every
+pass returns a graph whose nodes carry explicit ``inputs`` edges.
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 import jax.numpy as jnp
 
 from repro.core import ir, swu as swu_mod
 from repro.core.folding import balance_pipeline
-from repro.core.ir import Graph, Node, validate_chain
+from repro.core.ir import Graph, Node, validate_graph
 from repro.core.mvu import MVUConfig, MVULayer
 from repro.core.thresholds import bn_quant_thresholds, streamline_signs
+
+
+def _reroute(graph: Graph, renames: dict[str, str]) -> Graph:
+    """Repoint every input edge through ``renames`` (old producer name ->
+    the name of the node that now yields its stream)."""
+    if not renames:
+        return graph
+    out = Graph()
+    for n in graph:
+        ins = tuple(renames.get(s, s) for s in n.inputs)
+        out.append(n if ins == n.inputs else dataclasses.replace(n, inputs=ins))
+    return out
+
+
+def _sole_consumer(cons: dict[str, list[Node]], name: str, op: str) -> Node | None:
+    """The single consumer of ``name`` when it exists and has op ``op``."""
+    cs = cons.get(name, ())
+    if len(cs) == 1 and cs[0].op == op:
+        return cs[0]
+    return None
 
 
 def lower_to_mvu(graph: Graph, *, mode: str = "standard",
                  weight_bits: int = 4, act_bits: int = 4,
                  backend: str = "pallas") -> Graph:
     """conv -> swu+mvu; linear -> mvu. Float weights stay attached (raw)."""
-    validate_chain(graph)
-    out: Graph = []
-    for node in graph:
+    validate_graph(graph)
+    out = Graph()
+    renames: dict[str, str] = {}
+    for node in ir.as_graph(graph):
         if node.op == "conv":
             kd = node.attrs["kernel"]
-            out.append(Node("swu", node.name + ".swu", dict(node.attrs)))
+            out.append(Node("swu", node.name + ".swu", dict(node.attrs),
+                            inputs=node.inputs))
             wm = swu_mod.pack_conv_weights(node.params["w"])  # (N, K)
             cfg = MVUConfig(
                 in_features=wm.shape[1], out_features=wm.shape[0],
@@ -37,7 +66,9 @@ def lower_to_mvu(graph: Graph, *, mode: str = "standard",
                 backend=backend,
             )
             out.append(Node("mvu", node.name + ".mvu",
-                            {"config": cfg}, {"w_float": wm}))
+                            {"config": cfg}, {"w_float": wm},
+                            inputs=(node.name + ".swu",)))
+            renames[node.name] = node.name + ".mvu"
         elif node.op == "linear":
             w = node.params["w"]
             cfg = MVUConfig(
@@ -46,50 +77,58 @@ def lower_to_mvu(graph: Graph, *, mode: str = "standard",
                 backend=backend,
             )
             out.append(Node("mvu", node.name + ".mvu", {"config": cfg},
-                            {"w_float": w}))
+                            {"w_float": w}, inputs=node.inputs))
+            renames[node.name] = node.name + ".mvu"
         else:
             out.append(node)
-    return out
+    return _reroute(out, renames)
 
 
 def streamline(graph: Graph) -> Graph:
-    """Fold [mvu, batchnorm, quant_act] into mvu-with-thresholds (MVTU)."""
-    out: Graph = []
-    i = 0
-    while i < len(graph):
-        node = graph[i]
-        nxt = graph[i + 1] if i + 1 < len(graph) else None
-        nx2 = graph[i + 2] if i + 2 < len(graph) else None
-        if (
-            node.op == "mvu"
-            and nxt is not None and nxt.op == "batchnorm"
-            and nx2 is not None and nx2.op == "quant_act"
-        ):
-            cfg: MVUConfig = node.attrs["config"]
-            w_float = node.params["w_float"]
-            bits = nx2.attrs["bits"]
-            # weight scale factors into BN: acc_int * (w_scale) feeds BN.
-            params, qt = MVULayer.from_float(cfg, w_float)
-            acc_scale = qt.scale.reshape(-1)  # (N,)
-            t, flip = bn_quant_thresholds(
-                nxt.params["gamma"], nxt.params["beta"],
-                nxt.params["mean"], nxt.params["var"],
-                bits=bits, acc_scale=1.0,
-                act_scale=nx2.attrs.get("act_scale", 1.0),
-            )
-            # thresholds computed against real acc = acc_int * acc_scale:
-            t = t / acc_scale[:, None]
-            # flip rows (negative gamma): negate quantized weight rows.
-            wq = streamline_signs(qt.values.astype(jnp.int32), flip).astype(qt.values.dtype)
-            qt2 = type(qt)(wq, qt.scale, qt.bits, qt.signed)
-            params, _ = _params_from_qtensor(cfg, qt2, t)
-            cfg2 = MVUConfig(**{**cfg.__dict__, "act_bits": bits})
-            out.append(Node("mvu", node.name, {"config": cfg2}, {"mvu": params}))
-            i += 3
-        else:
-            out.append(node)
-            i += 1
-    return out
+    """Fold [mvu, batchnorm, quant_act] into mvu-with-thresholds (MVTU).
+
+    Matched along edges: the batchnorm must be the MVU's sole consumer and
+    the quant_act the batchnorm's sole consumer (a fork in between means
+    some branch still needs the raw stream).  The quant_act's own fan-out
+    is fine -- its consumers are rerouted to the fused node.
+    """
+    g = ir.as_graph(graph)
+    cons = ir.consumer_map(g)
+    drop: set[str] = set()
+    fused: dict[str, Node] = {}
+    renames: dict[str, str] = {}
+    for node in g:
+        if node.op != "mvu" or "w_float" not in node.params:
+            continue
+        bn = _sole_consumer(cons, node.name, "batchnorm")
+        qa = bn and _sole_consumer(cons, bn.name, "quant_act")
+        if qa is None:
+            continue
+        cfg: MVUConfig = node.attrs["config"]
+        w_float = node.params["w_float"]
+        bits = qa.attrs["bits"]
+        # weight scale factors into BN: acc_int * (w_scale) feeds BN.
+        params, qt = MVULayer.from_float(cfg, w_float)
+        acc_scale = qt.scale.reshape(-1)  # (N,)
+        t, flip = bn_quant_thresholds(
+            bn.params["gamma"], bn.params["beta"],
+            bn.params["mean"], bn.params["var"],
+            bits=bits, acc_scale=1.0,
+            act_scale=qa.attrs.get("act_scale", 1.0),
+        )
+        # thresholds computed against real acc = acc_int * acc_scale:
+        t = t / acc_scale[:, None]
+        # flip rows (negative gamma): negate quantized weight rows.
+        wq = streamline_signs(qt.values.astype(jnp.int32), flip).astype(qt.values.dtype)
+        qt2 = type(qt)(wq, qt.scale, qt.bits, qt.signed)
+        params, _ = _params_from_qtensor(cfg, qt2, t)
+        cfg2 = MVUConfig(**{**cfg.__dict__, "act_bits": bits})
+        fused[node.name] = Node("mvu", node.name, {"config": cfg2},
+                                {"mvu": params}, inputs=node.inputs)
+        drop.update((bn.name, qa.name))
+        renames[qa.name] = node.name
+    out = Graph(fused.get(n.name, n) for n in g if n.name not in drop)
+    return _reroute(out, renames)
 
 
 def _params_from_qtensor(cfg: MVUConfig, qt, thresholds):
@@ -109,12 +148,13 @@ def _params_from_qtensor(cfg: MVUConfig, qt, thresholds):
 
 def finalize(graph: Graph) -> Graph:
     """Quantize any mvu nodes still carrying float weights (no BN to fold)."""
-    out: Graph = []
-    for node in graph:
+    out = Graph()
+    for node in ir.as_graph(graph):
         if node.op == "mvu" and "mvu" not in node.params:
             cfg: MVUConfig = node.attrs["config"]
             params, _ = MVULayer.from_float(cfg, node.params["w_float"])
-            out.append(Node("mvu", node.name, dict(node.attrs), {"mvu": params}))
+            out.append(Node("mvu", node.name, dict(node.attrs), {"mvu": params},
+                            inputs=node.inputs))
         else:
             out.append(node)
     return out
@@ -151,33 +191,32 @@ def fuse_epilogues(graph: Graph) -> Graph:
     thresholds, so the fused node emits integer activation levels straight
     from the accumulator — no float epilogue nodes remain in the hot path.
 
-    Handled patterns (the head MVU and anything else pass through):
-        [mvu, batchnorm, quant_act] -> mvu(+thresholds)
-        [mvu, quant_act]            -> mvu(+thresholds)   (identity BN)
+    Handled patterns (the head MVU and anything else pass through); the
+    epilogue nodes must sit on a sole-consumer path off the MVU, while the
+    quant_act's own consumers (including residual fan-out) reroute to the
+    fused node:
+        mvu -> batchnorm -> quant_act   =>  mvu(+thresholds)
+        mvu -> quant_act                =>  mvu(+thresholds)  (identity BN)
     """
     from repro.core.mvu import MVUParams
 
-    out: Graph = []
-    i = 0
-    while i < len(graph):
-        node = graph[i]
+    g = ir.as_graph(graph)
+    cons = ir.consumer_map(g)
+    drop: set[str] = set()
+    fused_nodes: dict[str, Node] = {}
+    renames: dict[str, str] = {}
+    for node in g:
         fusable = (
             node.op in ("mvu", "conv_mvu")
             and "mvu" in node.params
             and node.params["mvu"].thresholds is None
         )
-        bn = None
-        qa = None
-        if fusable:
-            nxt = graph[i + 1] if i + 1 < len(graph) else None
-            if nxt is not None and nxt.op == "batchnorm":
-                bn = nxt
-                nxt = graph[i + 2] if i + 2 < len(graph) else None
-            if nxt is not None and nxt.op == "quant_act":
-                qa = nxt
+        if not fusable:
+            continue
+        bn = _sole_consumer(cons, node.name, "batchnorm")
+        qa = (_sole_consumer(cons, bn.name, "quant_act") if bn is not None
+              else _sole_consumer(cons, node.name, "quant_act"))
         if qa is None:
-            out.append(node)
-            i += 1
             continue
 
         cfg: MVUConfig = node.attrs["config"]
@@ -214,43 +253,47 @@ def fuse_epilogues(graph: Graph) -> Graph:
         attrs = dict(node.attrs)
         attrs["config"] = cfg2
         attrs["fused"] = tuple(x.name for x in (bn, qa) if x is not None)
-        out.append(Node(node.op, node.name, attrs, {"mvu": fused_params}))
-        i += 3 if bn is not None else 2
-    return out
+        fused_nodes[node.name] = Node(node.op, node.name, attrs,
+                                      {"mvu": fused_params}, inputs=node.inputs)
+        drop.update(x.name for x in (bn, qa) if x is not None)
+        renames[qa.name] = node.name
+    out = Graph(fused_nodes.get(n.name, n) for n in g if n.name not in drop)
+    return _reroute(out, renames)
 
 
 def fuse_swu(graph: Graph) -> Graph:
-    """Collapse ``[swu, mvu]`` pairs into one ``conv_mvu`` node.
+    """Collapse ``swu -> mvu`` edges into one ``conv_mvu`` node.
 
     The standalone SWU materializes the full (B, OH*OW, Kd^2*C) im2col
     matrix in HBM before the MVU consumes it; the fused node streams sliding
     windows through the line-buffer kernel (``kernels.swu_mvu``) instead --
     the runtime analog of FINN's SWU->MVU AXI stream, where the interleaved
     GEMM activation matrix never exists in memory.  Requires finalized MVU
-    nodes (``params["mvu"]``); run after :func:`finalize` /
-    :func:`fuse_epilogues`.
+    nodes (``params["mvu"]``) and an SWU with a single consumer; run after
+    :func:`finalize` / :func:`fuse_epilogues`.
     """
-    out: Graph = []
-    i = 0
-    while i < len(graph):
-        node = graph[i]
-        nxt = graph[i + 1] if i + 1 < len(graph) else None
-        if (
-            node.op == "swu"
-            and nxt is not None and nxt.op == "mvu"
-            and "mvu" in nxt.params
-        ):
-            attrs = dict(nxt.attrs)
-            attrs["kernel"] = node.attrs["kernel"]
-            attrs["stride"] = node.attrs["stride"]
-            attrs["pad"] = node.attrs["pad"]
-            name = nxt.name.replace(".mvu", ".conv_mvu")
-            out.append(Node("conv_mvu", name, attrs, nxt.params))
-            i += 2
-        else:
-            out.append(node)
-            i += 1
-    return out
+    g = ir.as_graph(graph)
+    cons = ir.consumer_map(g)
+    drop: set[str] = set()
+    fused: dict[str, Node] = {}
+    renames: dict[str, str] = {}
+    for node in g:
+        if node.op != "swu":
+            continue
+        mvu = _sole_consumer(cons, node.name, "mvu")
+        if mvu is None or "mvu" not in mvu.params:
+            continue
+        attrs = dict(mvu.attrs)
+        attrs["kernel"] = node.attrs["kernel"]
+        attrs["stride"] = node.attrs["stride"]
+        attrs["pad"] = node.attrs["pad"]
+        name = mvu.name.replace(".mvu", ".conv_mvu")
+        fused[mvu.name] = Node("conv_mvu", name, attrs, mvu.params,
+                               inputs=node.inputs)
+        drop.add(node.name)
+        renames[mvu.name] = name
+    out = Graph(fused.get(n.name, n) for n in g if n.name not in drop)
+    return _reroute(out, renames)
 
 
 def apply_folding(graph: Graph, *, target_cycles: int | None = None,
@@ -260,22 +303,23 @@ def apply_folding(graph: Graph, *, target_cycles: int | None = None,
     Conv stages fold over the pixel dimension too: their cycle count is
     ``n_pixels * NF * SF`` (paper Eq. 1 with the SWU feeding one window per
     output pixel), so a conv layer with few channels but many pixels can
-    still be the rate bottleneck.
+    still be the rate bottleneck.  MVU stages are visited in topological
+    (dataflow) order; configs rewrite in place through the shared attrs
+    dicts, so the caller's graph is updated.
     """
-    shape = None
     shapes = []
-    mvu_idx = []
-    for i, node in enumerate(graph):
-        shape = ir.propagate(shape, node)
+    mvu_nodes = []
+    for node, _, out_shape in ir.io_shapes(graph):
         if node.op in ("mvu", "conv_mvu"):
             cfg: MVUConfig = node.attrs["config"]
-            shapes.append((cfg.out_features, cfg.in_features, ir.n_pixels(shape)))
-            mvu_idx.append(i)
+            shapes.append((cfg.out_features, cfg.in_features,
+                           ir.n_pixels(out_shape)))
+            mvu_nodes.append(node)
     folds = balance_pipeline(shapes, slowest_cycles=target_cycles,
                              max_pe=max_pe, max_simd=max_simd)
-    for i, f in zip(mvu_idx, folds):
-        cfg = graph[i].attrs["config"]
-        graph[i].attrs["config"] = MVUConfig(**{**cfg.__dict__, "folding": f})
+    for node, f in zip(mvu_nodes, folds):
+        cfg = node.attrs["config"]
+        node.attrs["config"] = MVUConfig(**{**cfg.__dict__, "folding": f})
     return graph
 
 

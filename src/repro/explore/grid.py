@@ -56,16 +56,15 @@ class SweepPoint:
 
 
 def layer_shapes(graph: Graph) -> list[LayerShape]:
-    """The (N, K, n_pixels) of every MVU stage in a *lowered* chain."""
+    """The (N, K, n_pixels) of every MVU stage of a *lowered* graph, in
+    dataflow (topological) order."""
     shapes: list[LayerShape] = []
-    shape = None
-    for node in graph:
-        shape = ir.propagate(shape, node)
+    for node, _, out_shape in ir.io_shapes(graph):
         if node.op not in ("mvu", "conv_mvu"):
             continue
         cfg = node.attrs["config"]
         shapes.append(LayerShape(node.name, cfg.out_features,
-                                 cfg.in_features, ir.n_pixels(shape)))
+                                 cfg.in_features, ir.n_pixels(out_shape)))
     return shapes
 
 

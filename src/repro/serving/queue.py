@@ -50,9 +50,11 @@ class InputSpec:
 
     @classmethod
     def from_graph(cls, graph: Graph) -> "InputSpec":
-        head = graph[0]
-        if head.op != "input":
-            raise ValueError("graph must start with an input node")
+        heads = [n for n in graph if n.op == "input"]
+        if len(heads) != 1:
+            raise ValueError(
+                f"graph must have exactly one input node, found {len(heads)}")
+        head = heads[0]
         return cls(tuple(head.attrs["shape"]), int(head.attrs.get("bits", 1)))
 
     def validate_batch(self, xs) -> np.ndarray:

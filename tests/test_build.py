@@ -121,8 +121,16 @@ def test_custom_step_injection_and_replacement():
         seen["ops"] = [n.op for n in state.graph]
 
     def rename_step(state):  # returns a graph -> replaces state.graph
-        g = list(state.graph)
-        g[0] = Node("input", "renamed_in", dict(g[0].attrs), dict(g[0].params))
+        g = []
+        for n in state.graph:
+            if n.op == "input":
+                g.append(Node("input", "renamed_in", dict(n.attrs),
+                              dict(n.params)))
+            elif n.inputs and "in" in n.inputs:  # repoint consumers' edges
+                g.append(dataclasses.replace(n, inputs=tuple(
+                    "renamed_in" if s == "in" else s for s in n.inputs)))
+            else:
+                g.append(n)
         return g
 
     steps = default_steps("engine")

@@ -1,6 +1,10 @@
-"""ir.validate_chain: every malformed-graph case fails with the offending
-node's index/op and what the chain expected -- not a bare assert or an
-index error from deep inside a transform."""
+"""ir.validate_graph: every malformed-graph case fails with the offending
+node's id (name) and op and what the graph expected -- not a bare assert
+or a KeyError from deep inside a transform.  Also covers the deprecated
+chain-era entry points (``validate_chain``, ``propagate(shape, node)``),
+which must keep working behind one-warning-per-process shims."""
+
+import warnings
 
 import numpy as np
 import pytest
@@ -10,8 +14,8 @@ from repro.core import ir
 from repro.core.ir import Node
 
 
-def _input(shape=(8, 8, 3), bits=2):
-    return Node("input", "in", {"shape": shape, "bits": bits})
+def _input(shape=(8, 8, 3), bits=2, name="in"):
+    return Node("input", name, {"shape": shape, "bits": bits})
 
 
 def _conv(name="c0"):
@@ -25,61 +29,70 @@ def _linear(name="fc0", n=4, k=16):
 
 def test_empty_graph():
     with pytest.raises(ValueError, match="empty graph.*'input'"):
-        ir.validate_chain([])
+        ir.validate_graph([])
 
 
-def test_head_must_be_input():
+def test_source_must_be_an_input_node():
+    # a lone conv becomes a zero-input source, which only 'input' may be
     with pytest.raises(ValueError,
-                       match=r"must start with an 'input' node.*node 0 "
-                             r"\(conv 'c0'\)"):
-        ir.validate_chain([_conv()])
+                       match=r"node 'c0' \(conv\): 'conv' takes exactly 1 "
+                             r"input, got 0"):
+        ir.validate_graph([_conv()])
 
 
-def test_unknown_op_names_index_and_node():
+def test_unknown_op_names_the_node():
     g = [_input((16,)), Node("relu", "act0", {})]
-    with pytest.raises(ValueError, match=r"node 1 \(relu 'act0'\): unknown op"):
-        ir.validate_chain(g)
+    with pytest.raises(ValueError, match=r"node 'act0' \(relu\): unknown op"):
+        ir.validate_graph(g)
 
 
-def test_input_only_legal_at_head():
-    g = [_input((16,)), _linear(k=16), _input((16,))]
+def test_duplicate_node_names():
+    g = [_input((16,)), _linear("fc0", k=16), _linear("fc0", k=4)]
     with pytest.raises(ValueError,
-                       match=r"node 2 \(input 'in'\).*only legal at index 0.*"
-                             r"'linear'"):
-        ir.validate_chain(g)
+                       match=r"node 'fc0' \(linear\): duplicate node name"):
+        ir.validate_graph(g)
+
+
+def test_input_takes_no_edges():
+    g = [_input((16,)), _linear(k=16),
+         Node("input", "in2", {"shape": (16,)}, inputs=("fc0",))]
+    with pytest.raises(ValueError,
+                       match=r"node 'in2' \(input\).*takes no inputs.*"
+                             r"mid-chain 'input' is illegal"):
+        ir.validate_graph(g)
 
 
 def test_spatial_op_after_flat_producer():
     g = [_input((8, 8, 3)), Node("flatten", "flat", {}),
          Node("maxpool", "pool", {"size": 2})]
     with pytest.raises(ValueError,
-                       match=r"node 2 \(maxpool 'pool'\).*spatial \(H, W, C\) "
-                             r"activation.*'flatten' \('flat', index 1\) "
+                       match=r"node 'pool' \(maxpool\).*spatial \(H, W, C\) "
+                             r"activation.*'flatten' \('flat'\) "
                              r"yields shape \(192,\)"):
-        ir.validate_chain(g)
+        ir.validate_graph(g)
 
 
 def test_conv_after_linear_producer():
     g = [_input((16,)), _linear(k=16), _conv("c1")]
     with pytest.raises(ValueError,
-                       match=r"node 2 \(conv 'c1'\).*producer 'linear'"):
-        ir.validate_chain(g)
+                       match=r"node 'c1' \(conv\).*producer 'linear'"):
+        ir.validate_graph(g)
 
 
 def test_swu_must_feed_mvu():
     swu = Node("swu", "c0.swu", {"kernel": 3, "stride": 1, "pad": 0})
     g = [_input(), swu, Node("batchnorm", "bn0", {}, {})]
     with pytest.raises(ValueError,
-                       match=r"node 2 \(batchnorm 'bn0'\).*sliding-window "
+                       match=r"node 'bn0' \(batchnorm\).*sliding-window "
                              r"unit must feed an 'mvu'"):
-        ir.validate_chain(g)
+        ir.validate_graph(g)
 
 
-def test_swu_cannot_terminate_the_chain():
+def test_swu_cannot_terminate_the_graph():
     swu = Node("swu", "c0.swu", {"kernel": 3, "stride": 1, "pad": 0})
-    with pytest.raises(ValueError, match=r"node 1 \(swu 'c0.swu'\).*cannot "
+    with pytest.raises(ValueError, match=r"node 'c0.swu' \(swu\).*cannot "
                                          r"terminate"):
-        ir.validate_chain([_input(), swu])
+        ir.validate_graph([_input(), swu])
 
 
 def test_missing_param_or_attr_names_the_node():
@@ -87,19 +100,49 @@ def test_missing_param_or_attr_names_the_node():
     ValueError, not a bare KeyError from inside shape propagation."""
     g = [_input((16,)), Node("linear", "fc0", {})]  # no weight param
     with pytest.raises(ValueError,
-                       match=r"node 1 \(linear 'fc0'\): missing required "
+                       match=r"node 'fc0' \(linear\): missing required "
                              r"attr/param 'w'"):
-        ir.validate_chain(g)
+        ir.validate_graph(g)
     g = [_input(), Node("conv", "c0", {}, {"w": jnp.zeros((3, 3, 3, 4))})]
     with pytest.raises(ValueError,
-                       match=r"node 1 \(conv 'c0'\): missing required "
+                       match=r"node 'c0' \(conv\): missing required "
                              r"attr/param 'kernel'"):
-        ir.validate_chain(g)
+        ir.validate_graph(g)
 
 
 def test_well_formed_chains_pass():
     flat = [_input((16,)), _linear(k=16), Node("quant_act", "a", {"bits": 2})]
-    ir.validate_chain(flat)
+    ir.validate_graph(flat)
     spatial = [_input(), _conv(), Node("maxpool", "p", {"size": 2}),
                Node("flatten", "flat", {}), _linear(n=4, k=36)]
-    ir.validate_chain(spatial)
+    ir.validate_graph(spatial)
+
+
+# ------------------------------------------------- deprecated entry points
+def test_validate_chain_is_a_warn_once_shim(monkeypatch):
+    """validate_chain still validates (through validate_graph) but warns
+    exactly once per process, like the EngineServer shim."""
+    monkeypatch.setattr(ir, "_VALIDATE_CHAIN_WARNED", False)
+    flat = [_input((16,)), _linear(k=16)]
+    with pytest.warns(DeprecationWarning, match="validate_graph"):
+        ir.validate_chain(flat)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a second warning would raise
+        ir.validate_chain(flat)
+    with pytest.raises(ValueError, match=r"node 'act0' \(relu\): unknown op"):
+        ir.validate_chain([_input((16,)), Node("relu", "act0", {})])
+
+
+def test_propagate_legacy_signature_shim(monkeypatch):
+    """The chain-era ``propagate(shape, node)`` convention keeps working
+    (one DeprecationWarning per process) and matches the new signature."""
+    monkeypatch.setattr(ir, "_PROPAGATE_SHIM_WARNED", False)
+    node = _linear(n=4, k=16)
+    with pytest.warns(DeprecationWarning,
+                      match=r"propagate\(node, \*input_shapes\)"):
+        assert ir.propagate((16,), node) == (4,)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # second legacy call: silent
+        assert ir.propagate((16,), node) == (4,)
+        assert ir.propagate(None, _input((16,))) == (16,)
+    assert ir.propagate(node, (16,)) == (4,)  # new signature, no warning
