@@ -668,6 +668,50 @@ def section_serving(w):
       + (f" ({note})\n" if note else "\n"))
 
 
+def section_chaos(w):
+    ch = _load("experiments/bench/chaos_serving.json")
+    if not ch:
+        return
+    w("\n## Chaos serving — self-healing under a committed fault plan\n")
+    plan = ch.get("fault_plan", {})
+    rates = ", ".join(f"{k} {v:.0%}" for k, v in plan.get("rates", {}).items())
+    events = ", ".join(f"{e['kind']}@(r{e['replica']},d{e['at_dispatch']})"
+                       for e in plan.get("events", []))
+    w(f"`python -m benchmarks.chaos_serving` drives the hardened serving "
+      f"path (default `FaultPolicy` + hedging) and the pre-hardening "
+      f"baseline (`FaultPolicy.disabled()`) through the same "
+      f"{ch['requests']}-request Poisson load on {ch['replicas']} logical "
+      f"replicas, both injected with the identical committed `FaultPlan` "
+      f"(seed {plan.get('seed')}; per-dispatch rates: {rates}; scripted "
+      f"events: {events}). Draws are pure functions of "
+      f"`(seed, replica, dispatch_index)`, so the schedule replays exactly "
+      f"(schema: docs/formats.md).\n")
+    w("| claim (CI-gated, absolute) | hardened | baseline (same plan) |")
+    w("|---|---|---|")
+    w(f"| corrupted results delivered (ceiling {ch['max_corrupted_delivered']}) "
+      f"| **{ch['corrupted_delivered']}** "
+      f"| {ch['baseline_corrupted_delivered']} |")
+    w(f"| gold-tier completion within deadline "
+      f"(floor {ch['min_gold_completion_rate']:.0%}) "
+      f"| **{ch['gold_completion_rate']:.1%}** "
+      f"| {ch['baseline_gold_completion_rate']:.1%} |")
+    w(f"| requests stuck forever (hung replica) | {ch['stuck_requests']} "
+      f"| {ch['baseline_stuck_requests']} |")
+    w(f"| availability (completed/submitted) | {ch['availability']:.1%} "
+      f"| {ch['baseline_availability']:.1%} |")
+    w(f"\nThe same plan breaks the baseline in "
+      f"**{ch['baseline_failure_modes']}** distinct mode(s) (floor "
+      f"{ch['min_baseline_failure_modes']}) — the A/B proof the hardening "
+      f"is load-bearing. Hardened-arm mechanics over the run: "
+      f"{ch['retries']} retries, {ch['hedges']} hedges "
+      f"({ch['hedge_wins']} won), {ch['corrupt_batches_caught']} corrupt "
+      f"batches caught by the integrity guard, {ch['quarantines']} "
+      f"quarantines, {ch['probes']} canary probes, {ch['recoveries']} "
+      f"recoveries; p99 {ch['p99_ms']:.1f} ms against a "
+      f"{ch['slo_ms']:.0f} ms SLO. Nightly CI re-runs this as a long soak "
+      f"at doubled fault rates.\n")
+
+
 def section_appendix(w, sweep):
     large = sweep.get("large") if sweep else None
     if not large:
@@ -719,6 +763,7 @@ def main():
     section_build_reports(w)
     section_residual(w)
     section_serving(w)
+    section_chaos(w)
     section_appendix(w, sweep)
 
     with open("EXPERIMENTS.md", "w") as f:

@@ -77,17 +77,25 @@ class Accelerator:
         return self.engine.plan(batch)
 
     # -------------------------------------------------------------- serving
-    def serve(self, *, warmup: bool = True, cache=None, **kwargs):
+    def serve(self, *, warmup: bool = True, cache=None,
+              fault_policy=None, faults=None, **kwargs):
         """A :class:`~repro.serving.batcher.ContinuousBatcher` over the
         engine.  The build's cache (holding the calibrated cycle time when
         the ``serving`` target ran) feeds the flush budgets unless an
         explicit ``cache`` overrides it; ``warmup`` precompiles every
-        bucket shape on every replica before traffic arrives."""
+        bucket shape on every replica before traffic arrives.
+
+        ``fault_policy`` (a :class:`~repro.serving.health.FaultPolicy`)
+        tunes the failure handling -- retries, dispatch timeouts, hedging,
+        the integrity guard and brownout; the default policy is enabled
+        with conservative settings and adds no overhead while replicas are
+        healthy.  ``faults`` injects a deterministic
+        :class:`~repro.serving.faults.FaultPlan` (chaos testing only)."""
         from repro.serving import ContinuousBatcher
 
         batcher = ContinuousBatcher(
             self.engine, cache=cache if cache is not None else self.cache,
-            **kwargs)
+            fault_policy=fault_policy, faults=faults, **kwargs)
         return batcher.warmup() if warmup else batcher
 
     # ------------------------------------------------------------- pipeline

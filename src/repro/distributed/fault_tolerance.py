@@ -16,11 +16,10 @@ restart-from-checkpoint, so MTTR is dominated by (a) checkpoint cadence and
 
 from __future__ import annotations
 
-import collections
-import statistics
 import time
 
 from repro.checkpoint import ckpt
+from repro.distributed.stragglers import TrailingStats
 
 
 class CheckpointManager:
@@ -37,10 +36,12 @@ class CheckpointManager:
             return False
         self.wait()
         if self.use_async:
-            self._pending = ckpt.save_async(self.dir, step, tree, extra=extra)
-            # the in-flight save is the keep-th checkpoint; prune completed
-            # ones to keep-1 (never deletes anything still being written).
+            # the in-flight save will be the keep-th checkpoint; prune the
+            # completed ones to keep-1 BEFORE launching it, so a fast save
+            # thread can't land in the prune's listing and evict its
+            # predecessor (keep would drop to keep-1 on disk).
             ckpt.prune(self.dir, max(self.keep - 1, 1))
+            self._pending = ckpt.save_async(self.dir, step, tree, extra=extra)
         else:
             ckpt.save(self.dir, step, tree, extra=extra)
             ckpt.prune(self.dir, self.keep)
@@ -60,10 +61,13 @@ class CheckpointManager:
 
 
 class StepWatchdog:
+    """Context-manager timer over :class:`TrailingStats` -- the straggler
+    test itself (trailing-median window, tested-before-appended, 8-sample
+    warmup) is shared with the serving replica health machine."""
+
     def __init__(self, *, window: int = 32, straggler_factor: float = 3.0):
-        self.times = collections.deque(maxlen=window)
-        self.factor = straggler_factor
-        self.stragglers = 0
+        self._stats = TrailingStats(window=window, factor=straggler_factor,
+                                    min_samples=8)
         self._t0 = None
 
     def __enter__(self):
@@ -71,14 +75,21 @@ class StepWatchdog:
         return self
 
     def __exit__(self, *exc):
-        dt = time.perf_counter() - self._t0
-        if len(self.times) >= 8:
-            med = statistics.median(self.times)
-            if dt > self.factor * med:
-                self.stragglers += 1
-        self.times.append(dt)
+        self._stats.observe(time.perf_counter() - self._t0)
         return False
 
     @property
+    def times(self):
+        return self._stats.times
+
+    @property
+    def factor(self) -> float:
+        return self._stats.factor
+
+    @property
+    def stragglers(self) -> int:
+        return self._stats.stragglers
+
+    @property
     def median(self) -> float:
-        return statistics.median(self.times) if self.times else 0.0
+        return self._stats.median

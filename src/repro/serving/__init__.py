@@ -6,8 +6,8 @@ bursts, and nothing is allowed to grow without bound.  The serving layer
 honors the same contract at the front door:
 
 * :mod:`repro.serving.queue` -- bounded admission queue with backpressure
-  (reject / shed policies), per-request deadlines, and input validation
-  against the engine graph's spec,
+  (reject / shed policies), per-request deadlines, SLO tiers, and input
+  validation against the engine graph's spec,
 * :mod:`repro.serving.batcher` -- continuous batcher whose flush policy is
   derived from the dataflow schedule (flush when a bucket fills, when the
   pipeline is idle, or when the oldest request's deadline slack shrinks to
@@ -16,7 +16,15 @@ honors the same contract at the front door:
   onto each local device, least-loaded async dispatch, blocking only at
   result resolution),
 * :mod:`repro.serving.metrics` -- p50/p95/p99 latency, throughput,
-  queue-depth and padding counters with a snapshot API.
+  queue-depth, padding, fault/retry/hedge/quarantine and availability
+  counters with a snapshot API,
+* :mod:`repro.serving.faults` -- deterministic seeded fault injection
+  (:class:`FaultPlan`) plus the output integrity guard (the chaos-test
+  substrate), and
+* :mod:`repro.serving.health` -- replica health state machine
+  (healthy -> suspect -> quarantined -> recovered via golden canary
+  probes), :class:`FaultPolicy` (retries, timeouts, hedging) and the
+  graceful-brownout controller.
 
 Quickstart::
 
@@ -37,8 +45,29 @@ from repro.serving.batcher import (
     ContinuousBatcher,
     calibrate_cycle_time,
 )
+from repro.serving.faults import (
+    DispatchError,
+    FaultEvent,
+    FaultPlan,
+    IntegrityError,
+    check_integrity,
+    infer_output_range,
+)
+from repro.serving.health import (
+    BEST_EFFORT,
+    GOLD,
+    TIERS,
+    BrownoutController,
+    FaultPolicy,
+    ReplicaHealth,
+)
 from repro.serving.metrics import ServingMetrics
-from repro.serving.pool import PendingBatch, Replica, ReplicaPool
+from repro.serving.pool import (
+    NoHealthyReplicas,
+    PendingBatch,
+    Replica,
+    ReplicaPool,
+)
 from repro.serving.queue import (
     AdmissionQueue,
     Block,
@@ -49,15 +78,28 @@ from repro.serving.queue import (
 
 __all__ = [
     "AdmissionQueue",
+    "BEST_EFFORT",
     "Block",
+    "BrownoutController",
     "CompletedRequest",
     "ContinuousBatcher",
+    "DispatchError",
     "Entry",
+    "FaultEvent",
+    "FaultPlan",
+    "FaultPolicy",
+    "GOLD",
     "InputSpec",
+    "IntegrityError",
+    "NoHealthyReplicas",
     "PendingBatch",
     "QueueFull",
     "Replica",
+    "ReplicaHealth",
     "ReplicaPool",
     "ServingMetrics",
+    "TIERS",
     "calibrate_cycle_time",
+    "check_integrity",
+    "infer_output_range",
 ]

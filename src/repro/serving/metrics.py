@@ -23,6 +23,10 @@ class ServingMetrics:
     COUNTERS = (
         "requests", "completed", "rejected", "shed", "flushes",
         "padded_samples", "deadline_misses", "dispatched_samples",
+        # failure handling (repro.serving.faults / health)
+        "dispatch_failures", "retries", "hedges", "hedge_wins", "timeouts",
+        "corrupt_batches", "quarantines", "recoveries", "probes",
+        "brownout_shed",
     )
 
     def __init__(self, *, reservoir: int = 8192, clock=time.perf_counter):
@@ -33,6 +37,9 @@ class ServingMetrics:
         self._t_last: float | None = None
         self.queue_depth = 0
         self.max_queue_depth = 0
+        self.healthy_replicas: int | None = None
+        self.total_replicas: int | None = None
+        self.brownout_level = 0
 
     # ------------------------------------------------------------- recording
     def count(self, key: str, n: int = 1) -> None:
@@ -41,6 +48,13 @@ class ServingMetrics:
     def observe_depth(self, depth: int) -> None:
         self.queue_depth = depth
         self.max_queue_depth = max(self.max_queue_depth, depth)
+
+    def observe_health(self, healthy: int, total: int) -> None:
+        self.healthy_replicas = healthy
+        self.total_replicas = total
+
+    def observe_brownout(self, level: int) -> None:
+        self.brownout_level = level
 
     def observe_latency(self, seconds: float, *, now: float | None = None) -> None:
         now = self._clock() if now is None else now
@@ -74,6 +88,14 @@ class ServingMetrics:
             return 0.0
         return self.counters["padded_samples"] / total
 
+    def availability(self) -> float:
+        """Fraction of admitted requests that completed with a result (the
+        complement of shed/abandoned traffic); 1.0 when nothing arrived."""
+        reqs = self.counters["requests"]
+        if reqs <= 0:
+            return 1.0
+        return self.counters["completed"] / reqs
+
     def snapshot(self) -> dict:
         return {
             **self.counters,
@@ -82,4 +104,8 @@ class ServingMetrics:
             "queue_depth": self.queue_depth,
             "max_queue_depth": self.max_queue_depth,
             "padding_overhead": self.padding_overhead(),
+            "availability": self.availability(),
+            "healthy_replicas": self.healthy_replicas,
+            "total_replicas": self.total_replicas,
+            "brownout_level": self.brownout_level,
         }

@@ -33,6 +33,10 @@ class QueueFull(RuntimeError):
     """Raised by ``policy="reject"`` when admission would exceed capacity."""
 
 
+# SLO tiers (mirrored from repro.serving.health to avoid a circular import)
+TIERS = ("gold", "best_effort")
+
+
 @dataclasses.dataclass(frozen=True)
 class InputSpec:
     """Per-sample input contract of an engine graph (shape minus batch dim).
@@ -97,24 +101,36 @@ class Block:
     xs: np.ndarray  # (len(rids), *spec.shape) -- a view of the caller's batch
     t_submit: float
     deadline: float
+    tier: str = "gold"  # SLO tier: "gold" | "best_effort" (brownout sheds the latter first)
 
     def __len__(self) -> int:
         return len(self.rids)
 
     def split(self, n: int) -> tuple["Block", "Block"]:
         """Head block of ``n`` samples + the remainder (views, no copies)."""
-        head = Block(self.rids[:n], self.xs[:n], self.t_submit, self.deadline)
-        tail = Block(self.rids[n:], self.xs[n:], self.t_submit, self.deadline)
+        head = Block(self.rids[:n], self.xs[:n], self.t_submit, self.deadline,
+                     self.tier)
+        tail = Block(self.rids[n:], self.xs[n:], self.t_submit, self.deadline,
+                     self.tier)
         return head, tail
+
+    def entries(self) -> list["Entry"]:
+        return [Entry(r, self.t_submit, self.deadline, self.tier)
+                for r in self.rids]
 
 
 @dataclasses.dataclass(frozen=True)
 class Entry:
-    """One popped request: what the batcher needs to track a sample."""
+    """One popped request: what the batcher needs to track a sample.
+
+    ``attempts`` counts completed dispatch attempts (the retry machinery
+    bumps it via ``dataclasses.replace`` on every re-dispatch)."""
 
     rid: int
     t_submit: float
     deadline: float
+    tier: str = "gold"
+    attempts: int = 0
 
 
 class AdmissionQueue:
@@ -182,8 +198,7 @@ class AdmissionQueue:
             oldest = self._blocks[0]
             drop = min(len(oldest), self._depth + n - self.capacity)
             head, tail = oldest.split(drop)
-            self.shed_entries.extend(
-                Entry(r, head.t_submit, head.deadline) for r in head.rids)
+            self.shed_entries.extend(head.entries())
             self._depth -= drop
             self._min_dirty = True
             if len(tail):
@@ -192,13 +207,15 @@ class AdmissionQueue:
                 self._blocks.popleft()
 
     def _admit_block(self, xs: np.ndarray, deadline: float | None,
-                     now: float | None) -> list[int]:
+                     now: float | None, tier: str) -> list[int]:
         """Append one already-validated block (single validation pass)."""
+        if tier not in TIERS:
+            raise ValueError(f"tier must be one of {TIERS}, got {tier!r}")
         now = self._clock() if now is None else now
         self._make_room(len(xs))
         rids = range(self._next_rid, self._next_rid + len(xs))
         self._next_rid += len(xs)
-        block = Block(rids, xs, now, self._deadline(now, deadline))
+        block = Block(rids, xs, now, self._deadline(now, deadline), tier)
         self._blocks.append(block)
         self._depth += len(xs)
         if not self._min_dirty:
@@ -206,14 +223,39 @@ class AdmissionQueue:
         return list(rids)
 
     def admit_batch(self, xs, *, deadline: float | None = None,
-                    now: float | None = None) -> list[int]:
+                    now: float | None = None, tier: str = "gold") -> list[int]:
         """Admit a (B, *shape) batch as ONE block; returns per-sample rids."""
-        return self._admit_block(self.spec.validate_batch(xs), deadline, now)
+        return self._admit_block(self.spec.validate_batch(xs), deadline, now, tier)
 
     def admit(self, x, *, deadline: float | None = None,
-              now: float | None = None) -> int:
+              now: float | None = None, tier: str = "gold") -> int:
         """Admit one sample (shape = the engine input spec); returns its rid."""
-        return self._admit_block(self.spec.validate_sample(x), deadline, now)[0]
+        return self._admit_block(self.spec.validate_sample(x), deadline, now, tier)[0]
+
+    def take_rids(self, n: int) -> list[int]:
+        """Allocate ``n`` request ids without enqueueing anything -- the
+        brownout path sheds best-effort arrivals at the front door but must
+        still hand the caller real rids so its waiters terminate."""
+        rids = list(range(self._next_rid, self._next_rid + n))
+        self._next_rid += n
+        return rids
+
+    def shed_tier(self, tier: str) -> int:
+        """Drop every queued block of ``tier`` (brownout: best-effort goes
+        first); their entries land in ``shed_entries``.  Returns the count."""
+        dropped = 0
+        kept: collections.deque[Block] = collections.deque()
+        for block in self._blocks:
+            if block.tier == tier:
+                self.shed_entries.extend(block.entries())
+                self._depth -= len(block)
+                dropped += len(block)
+            else:
+                kept.append(block)
+        if dropped:
+            self._blocks = kept
+            self._min_dirty = True
+        return dropped
 
     # ------------------------------------------------------------------ pop
     def oldest_deadline(self) -> float:
@@ -251,8 +293,7 @@ class AdmissionQueue:
             block = self._blocks.popleft()
             take = min(len(block), n - len(entries))
             head, tail = block.split(take)
-            entries.extend(Entry(r, head.t_submit, head.deadline)
-                           for r in head.rids)
+            entries.extend(head.entries())
             parts.append(head.xs)
             self._depth -= take
             self._min_dirty = True

@@ -1,0 +1,211 @@
+"""Unit tests for the serving failure model's pure pieces: FaultPlan
+determinism + JSON round-trip, the corruption/integrity pair, the interval
+-arithmetic output bound, the replica health state machine, and the
+brownout controller."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import lowering
+from repro.core.ir import Node
+from repro.serving import (
+    BrownoutController,
+    FaultEvent,
+    FaultPlan,
+    FaultPolicy,
+    ReplicaHealth,
+    check_integrity,
+    infer_output_range,
+)
+from repro.serving.faults import corrupt_array
+from repro.serving.health import HEALTHY, QUARANTINED, SUSPECT
+
+
+def _mlp_graph(dims=(24, 16, 8), bits=2, seed=3):
+    rng = np.random.default_rng(seed)
+    g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("quant_act", f"act{i}", {"bits": bits, "act_scale": 1.0}))
+    return lowering.finalize(
+        lowering.lower_to_mvu(g, mode="standard", weight_bits=4, act_bits=bits))
+
+
+# ---------------------------------------------------------------- fault plan
+def test_fault_plan_draw_is_deterministic_and_timing_independent():
+    plan = FaultPlan(seed=11, rates={"error": 0.1, "corrupt": 0.1})
+    draws = [plan.draw(r, k) for r in range(3) for k in range(50)]
+    # replaying the plan (any order) reproduces the identical schedule
+    replay = [plan.draw(r, k) for r in range(3) for k in range(50)]
+    assert draws == replay
+    shuffled = [plan.draw(r, k) for r in reversed(range(3))
+                for k in reversed(range(50))]
+    assert draws == list(reversed(shuffled))
+    kinds = {d.kind for d in draws if d is not None}
+    assert kinds <= {"error", "corrupt"} and kinds  # both rates fire at n=150
+
+
+def test_fault_plan_rates_approximate_probabilities():
+    plan = FaultPlan(seed=0, rates={"error": 0.2})
+    n = 2000
+    hits = sum(plan.draw(0, k) is not None for k in range(n))
+    assert 0.15 < hits / n < 0.25
+
+
+def test_fault_plan_explicit_events_override_rates():
+    plan = FaultPlan(seed=0, rates={"error": 1.0},
+                     events=[FaultEvent("hang", replica=1, at_dispatch=3)])
+    ev = plan.draw(1, 3)
+    assert ev.kind == "hang"  # the event suppresses the certain rate draw
+    assert plan.draw(1, 4).kind == "error"
+
+
+def test_fault_plan_replica_scoping_and_validation():
+    plan = FaultPlan(seed=0, rates={"error": 1.0}, replicas=(2,))
+    assert plan.draw(0, 0) is None and plan.draw(2, 0).kind == "error"
+    with pytest.raises(ValueError, match="kind"):
+        FaultPlan(rates={"explode": 0.5})
+    with pytest.raises(ValueError, match="rate"):
+        FaultPlan(rates={"error": 1.5})
+    with pytest.raises(ValueError, match="kind"):
+        FaultEvent("explode", 0, 0)
+
+
+def test_fault_plan_json_round_trip(tmp_path):
+    plan = FaultPlan(seed=7, rates={"straggle": 0.05}, straggle_delay_s=0.02,
+                     events=[FaultEvent("die", 2, 9)], replicas=(0, 1))
+    path = plan.save(str(tmp_path / "plan.json"))
+    back = FaultPlan.load(path)
+    assert back == plan
+    assert [back.draw(r, k) for r in range(3) for k in range(30)] == \
+           [plan.draw(r, k) for r in range(3) for k in range(30)]
+
+
+def test_corrupt_array_is_deterministic_and_out_of_place():
+    y = np.arange(12, dtype=np.int32).reshape(3, 4)
+    a = corrupt_array(y, FaultPlan(seed=5).corruption_rng(0, 0))
+    b = corrupt_array(y, FaultPlan(seed=5).corruption_rng(0, 0))
+    np.testing.assert_array_equal(a, b)  # same rng key, same corruption
+    np.testing.assert_array_equal(y, np.arange(12).reshape(3, 4))  # no mutation
+    assert (a != y).any()
+    assert (np.abs(a.astype(np.int64)) >= (1 << 30)).any()  # high-bit flip
+    f = corrupt_array(y.astype(np.float32),
+                      FaultPlan(seed=5).corruption_rng(0, 1))
+    assert np.isnan(f).any()
+
+
+# ------------------------------------------------------------ integrity guard
+def test_infer_output_range_bounds_the_real_engine_output():
+    from repro.core.engine import FusedEngine
+
+    graph = _mlp_graph()
+    lo, hi = infer_output_range(graph)
+    engine = FusedEngine(graph)
+    xs = np.random.default_rng(0).integers(0, 4, (64, 24)).astype(np.int32)
+    ys = np.asarray(engine(jnp.asarray(xs)))
+    assert lo <= float(ys.min()) and float(ys.max()) <= hi
+    # the bound is tight enough that a high-bit flip escapes it
+    assert hi < 2**30 and lo > -(2**30)
+
+
+def test_infer_output_range_returns_none_on_unknown_ops():
+    g = [Node("input", "in", {"shape": (4,), "bits": 2}),
+         Node("mystery", "m", {}, {})]
+    assert infer_output_range(g) is None
+
+
+def test_check_integrity_catches_corruption_but_passes_clean():
+    from repro.core.engine import FusedEngine
+
+    graph = _mlp_graph()
+    rng_bound = infer_output_range(graph)
+    engine = FusedEngine(graph)
+    xs = np.random.default_rng(1).integers(0, 4, (8, 24)).astype(np.int32)
+    ys = np.asarray(engine(jnp.asarray(xs)))
+    assert check_integrity(ys, dtype=ys.dtype, value_range=rng_bound) is None
+    bad = corrupt_array(ys, FaultPlan(seed=1).corruption_rng(0, 0))
+    reason = check_integrity(bad, dtype=ys.dtype, value_range=rng_bound)
+    assert reason is not None  # NaN (float out) or range escape (int out)
+    assert "dtype" in check_integrity(ys.astype(np.int64), dtype=ys.dtype)
+    nan = np.full((2, 3), np.nan, np.float32)
+    assert "finite" in check_integrity(nan, dtype=np.float32)
+    # integer path: a high-bit flip escapes the interval bound exactly
+    iy = np.arange(12, dtype=np.int32).reshape(3, 4)
+    ibad = corrupt_array(iy, FaultPlan(seed=2).corruption_rng(0, 0))
+    assert "range" in check_integrity(ibad, value_range=(0.0, 11.0))
+    assert check_integrity(iy, value_range=(0.0, 11.0)) is None
+
+
+# ---------------------------------------------------------------- health fsm
+def test_health_failure_ladder_and_recovery_by_success():
+    p = FaultPolicy(suspect_after=1, quarantine_after=3)
+    h = ReplicaHealth(p)
+    assert h.state == HEALTHY and h.usable
+    h.record_failure(0.0, "boom")
+    assert h.state == SUSPECT and h.usable
+    h.record_success(0.01)  # a clean resolve clears suspicion
+    assert h.state == HEALTHY and h.consecutive_failures == 0
+    for t in (1.0, 2.0, 3.0):
+        h.record_failure(t, "boom")
+    assert h.state == QUARANTINED and not h.usable
+    assert h.quarantine_reason == "boom"
+    assert h.next_probe_at == pytest.approx(3.0 + p.probe_backoff_s)
+
+
+def test_health_straggles_escalate_to_quarantine_verdict():
+    p = FaultPolicy(straggler_min_samples=4, straggler_factor=3.0,
+                    straggles_to_quarantine=2)
+    h = ReplicaHealth(p)
+    for _ in range(6):
+        assert h.record_success(0.010) is None
+    assert h.record_success(0.100) == "straggle"
+    assert h.state == SUSPECT
+    assert h.record_success(0.100) == "quarantine"  # caller quarantines
+
+
+def test_health_probe_backoff_caps_and_recovery_resets():
+    p = FaultPolicy(probe_backoff_s=0.1, probe_backoff_cap_s=0.3)
+    h = ReplicaHealth(p)
+    h.quarantine(0.0, "corrupt output")
+    assert h.due_probe(0.1) and not h.due_probe(0.05)
+    assert not h.note_probe(False, 0.1)
+    assert h.next_probe_at == pytest.approx(0.3)  # 0.1 * 2^1
+    assert not h.note_probe(False, 0.3)
+    assert h.next_probe_at == pytest.approx(0.6)  # capped at 0.3 backoff
+    assert h.note_probe(True, 0.6)
+    assert h.state == HEALTHY and h.recoveries == 1
+    assert h.quarantine_reason is None and h.next_probe_at is None
+
+
+def test_health_policy_disabled_hedge_delay():
+    assert FaultPolicy.disabled().hedge_delay(1.0) is None
+    assert FaultPolicy(hedging=True, hedge_after_s=0.2).hedge_delay(1.0) == 0.2
+    p = FaultPolicy(hedging=True, hedge_factor=4.0)
+    assert p.hedge_delay(0.0) is None  # EWMA unarmed: never hedge blind
+    assert p.hedge_delay(0.05) == pytest.approx(0.2)
+
+
+# ------------------------------------------------------------------ brownout
+def test_brownout_levels_and_hysteresis():
+    p = FaultPolicy(brownout_healthy_frac=0.5, severe_healthy_frac=0.25,
+                    brownout_depth_frac=0.75, brownout_cooldown_s=1.0)
+    b = BrownoutController(p)
+    assert b.update(healthy_frac=1.0, depth_frac=0.1, now=0.0) == 0
+    assert b.update(healthy_frac=0.5, depth_frac=0.1, now=1.0) == 1
+    assert b.shedding_best_effort and not b.shrink_buckets
+    assert b.update(healthy_frac=0.25, depth_frac=0.1, now=2.0) == 2
+    assert b.shrink_buckets
+    # pressure gone, but de-escalation waits out the cooldown
+    assert b.update(healthy_frac=1.0, depth_frac=0.0, now=2.5) == 2
+    assert b.update(healthy_frac=1.0, depth_frac=0.0, now=3.6) == 0
+    # queue pressure alone also browns out
+    assert b.update(healthy_frac=1.0, depth_frac=0.8, now=4.0) == 1
+    assert b.update(healthy_frac=1.0, depth_frac=1.0, now=4.1) == 2
+
+
+def test_brownout_disabled_policy_stays_level_zero():
+    b = BrownoutController(FaultPolicy.disabled())
+    assert b.update(healthy_frac=0.0, depth_frac=1.0, now=0.0) == 0

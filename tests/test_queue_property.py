@@ -1,0 +1,87 @@
+"""Property test for the AdmissionQueue accounting invariant: under any
+interleaving of admits / pops / sheds, every admitted rid leaves the queue
+exactly once (popped, shed, or still pending) and the depth never exceeds
+capacity.  A seeded randomized version always runs; the hypothesis version
+(nightly CI installs hypothesis) additionally shrinks counterexamples."""
+
+import numpy as np
+import pytest
+
+from repro.serving import AdmissionQueue, InputSpec, QueueFull
+
+SPEC = InputSpec((4,), 2)
+
+
+def _apply(q, op, arg, admitted, popped, shed):
+    """One queue operation; returns nothing, mutates the ledgers."""
+    if op == "admit":
+        try:
+            rid = q.admit(np.full(4, arg % 4, np.int32),
+                          tier="best_effort" if arg % 3 == 0 else "gold")
+            admitted.append(rid)
+        except QueueFull:
+            pass
+    elif op == "admit_batch":
+        n = 1 + arg % 5
+        try:
+            admitted.extend(q.admit_batch(np.zeros((n, 4), np.int32)))
+        except (QueueFull, ValueError):
+            pass
+    elif op == "pop":
+        entries, xs = q.pop(1 + arg % 7)
+        assert len(entries) == len(xs)
+        popped.extend(e.rid for e in entries)
+    elif op == "shed_tier":
+        q.shed_tier("best_effort")
+    elif op == "drain_shed":
+        shed.extend(e.rid for e in q.drain_shed())
+
+
+def _check(q, admitted, popped, shed):
+    shed = shed + [e.rid for e in q.drain_shed()]
+    pending = q.pending_rids()
+    # every admitted rid is in exactly one ledger, no rid invented
+    everything = popped + shed + pending
+    assert sorted(everything) == sorted(set(everything)), "rid seen twice"
+    assert sorted(everything) == sorted(admitted), "rid lost or invented"
+    assert q.depth == len(pending)  # depth is the pending count
+    assert 0 <= q.depth <= q.capacity
+
+
+OPS = ("admit", "admit_batch", "pop", "shed_tier", "drain_shed")
+
+
+def _run_trace(policy, capacity, trace):
+    q = AdmissionQueue(SPEC, capacity=capacity, policy=policy)
+    admitted, popped, shed = [], [], []
+    for op_idx, arg in trace:
+        _apply(q, OPS[op_idx % len(OPS)], arg, admitted, popped, shed)
+        assert q.depth <= q.capacity
+    _check(q, admitted, popped, shed)
+
+
+@pytest.mark.parametrize("policy", ["reject", "shed"])
+def test_queue_exactly_once_accounting_randomized(policy):
+    rng = np.random.default_rng(1234 if policy == "reject" else 4321)
+    for _ in range(200):
+        capacity = int(rng.integers(1, 12))
+        trace = [(int(rng.integers(0, 64)), int(rng.integers(0, 64)))
+                 for _ in range(int(rng.integers(1, 60)))]
+        _run_trace(policy, capacity, trace)
+
+
+def test_queue_exactly_once_accounting_hypothesis():
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=200, deadline=None)
+    @given(
+        policy=st.sampled_from(["reject", "shed"]),
+        capacity=st.integers(min_value=1, max_value=12),
+        trace=st.lists(st.tuples(st.integers(0, 63), st.integers(0, 63)),
+                       min_size=1, max_size=60),
+    )
+    def prop(policy, capacity, trace):
+        _run_trace(policy, capacity, trace)
+
+    prop()

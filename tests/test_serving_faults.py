@@ -1,0 +1,320 @@
+"""Integration tests for the self-healing serving path: injected dispatch
+failures / hangs / stragglers / corruption / replica death against the
+hardened ContinuousBatcher + ReplicaPool, plus the A/B contract that
+``FaultPolicy.disabled()`` reproduces the pre-hardening behavior (minus
+silently dropped rids, which are unconditionally fixed)."""
+
+import time
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core import lowering
+from repro.core.engine import FusedEngine
+from repro.core.ir import Node
+from repro.serving import (
+    BEST_EFFORT,
+    ContinuousBatcher,
+    FaultEvent,
+    FaultPlan,
+    FaultPolicy,
+    ReplicaPool,
+)
+from repro.serving.health import QUARANTINED
+
+
+def _mlp_graph(dims=(24, 16, 8), bits=2, seed=3):
+    rng = np.random.default_rng(seed)
+    g = [Node("input", "in", {"shape": (dims[0],), "bits": bits})]
+    for i, (k, n) in enumerate(zip(dims[:-1], dims[1:])):
+        w = rng.normal(0, 0.5, (n, k)).astype(np.float32)
+        g.append(Node("linear", f"fc{i}", {}, {"w": jnp.asarray(w)}))
+        if i < len(dims) - 2:
+            g.append(Node("quant_act", f"act{i}", {"bits": bits, "act_scale": 1.0}))
+    return lowering.finalize(
+        lowering.lower_to_mvu(g, mode="standard", weight_bits=4, act_bits=bits))
+
+
+def _samples(n, k=24, bits=2, seed=0):
+    return np.random.default_rng(seed).integers(0, 2**bits, (n, k)).astype(np.int32)
+
+
+def _setup(policy, faults=None, *, n_replicas=2, buckets=(1, 4, 8), **kw):
+    """Engine + batcher over ``n_replicas`` LOGICAL replicas on one device
+    (the chaos substrate -- fault schedules are per logical replica)."""
+    engine = FusedEngine(_mlp_graph())
+    d = jax.local_devices()[0]
+    pool = ReplicaPool(engine, devices=[d] * n_replicas, faults=faults,
+                       policy=policy)
+    batcher = ContinuousBatcher(engine, batch_buckets=buckets, pool=pool,
+                                fault_policy=policy, **kw)
+    return engine, batcher
+
+
+# ------------------------------------------- satellite: no rid ever dropped
+def test_injected_dispatch_failure_retries_to_completion():
+    """A failed dispatch re-enqueues its whole batch; the retry lands on a
+    healthy replica and every result is bit-exact -- no rid dropped."""
+    plan = FaultPlan(seed=0, events=[FaultEvent("error", replica=0, at_dispatch=0)])
+    engine, batcher = _setup(FaultPolicy(max_retries=2), plan)
+    xs = _samples(8)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    c = batcher.metrics.counters
+    assert c["dispatch_failures"] == 1 and c["retries"] == 8
+    assert c["completed"] == 8 and c["shed"] == 0
+
+
+def test_real_dispatch_exception_does_not_lose_the_batch():
+    """Regression for the original bug: an exception out of engine.dispatch
+    used to propagate with the popped entries lost forever."""
+    engine, batcher = _setup(FaultPolicy(max_retries=2), n_replicas=1)
+    real, tripped = engine.dispatch, {"n": 0}
+
+    def flaky(x, params=None):
+        if tripped["n"] == 0:
+            tripped["n"] += 1
+            raise RuntimeError("transient device error")
+        return real(x, params=params)
+
+    engine.dispatch = flaky
+    xs = _samples(4)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    assert batcher.metrics.counters["dispatch_failures"] == 1
+
+
+def test_exhausted_retries_resolve_as_shed_never_dropped():
+    plan = FaultPlan(seed=1, rates={"error": 1.0})  # every dispatch fails
+    _, batcher = _setup(FaultPolicy(max_retries=1), plan)
+    rids = batcher.submit_batch(_samples(8))
+    batcher.drain(timeout=60)
+    assert sorted(batcher.results) == rids  # every rid resolved...
+    assert all(batcher.results[r].shed for r in rids)  # ...as shed
+    assert batcher.metrics.counters["completed"] == 0
+    assert batcher.metrics.availability() == 0.0
+
+
+def test_disabled_policy_still_resolves_failed_dispatch_as_shed():
+    """The satellite fix is unconditional: even the pre-hardening baseline
+    policy must not silently drop a batch whose dispatch raised."""
+    plan = FaultPlan(seed=2, rates={"error": 1.0})
+    _, batcher = _setup(FaultPolicy.disabled(), plan)
+    rids = batcher.submit_batch(_samples(4))
+    batcher.drain(timeout=60)
+    assert sorted(batcher.results) == rids
+    assert all(batcher.results[r].shed for r in rids)
+    assert batcher.metrics.counters["retries"] == 0  # but no retries either
+
+
+# --------------------------------------- satellite: harvest/drain timeouts
+def test_harvest_timeout_names_the_hung_replica():
+    plan = FaultPlan(seed=0, events=[FaultEvent("hang", replica=0, at_dispatch=0)])
+    # no dispatch timeout: nothing recovers the hang automatically, the
+    # explicit harvest timeout is the only way out
+    _, batcher = _setup(FaultPolicy(dispatch_timeout_s=None), plan,
+                        n_replicas=1)
+    batcher.submit_batch(_samples(4))
+    batcher.flush_all()
+    with pytest.raises(TimeoutError, match=r"replica\(s\) \[0\]"):
+        batcher.harvest(block=True, timeout=0.05)
+
+
+def test_drain_timeout_bounds_a_hung_replica():
+    plan = FaultPlan(seed=0, events=[FaultEvent("hang", replica=0, at_dispatch=0)])
+    _, batcher = _setup(FaultPolicy(dispatch_timeout_s=None), plan,
+                        n_replicas=1)
+    batcher.submit_batch(_samples(4))
+    with pytest.raises(TimeoutError):
+        batcher.drain(timeout=0.05)
+
+
+def test_dispatch_timeout_quarantines_and_redispatches():
+    """With the policy timeout armed the hang self-heals: the replica is
+    quarantined, the batch re-executes elsewhere, results stay bit-exact."""
+    plan = FaultPlan(seed=0, events=[FaultEvent("hang", replica=0, at_dispatch=0)])
+    engine, batcher = _setup(
+        FaultPolicy(dispatch_timeout_s=0.05, probe_backoff_s=100.0), plan)
+    xs = _samples(8)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    c = batcher.metrics.counters
+    assert c["timeouts"] == 1 and c["quarantines"] >= 1
+    assert batcher.pool.replicas[0].health.state == QUARANTINED
+
+
+# ----------------------------------------------------------------- hedging
+def test_hedged_dispatch_first_bit_exact_result_wins():
+    plan = FaultPlan(seed=0, events=[
+        FaultEvent("straggle", replica=0, at_dispatch=0, delay_s=0.5)])
+    engine, batcher = _setup(
+        FaultPolicy(hedging=True, hedge_after_s=0.02, dispatch_timeout_s=None),
+        plan)
+    xs = _samples(8)
+    rids = batcher.submit_batch(xs)
+    t0 = time.perf_counter()
+    batcher.drain(timeout=60)
+    elapsed = time.perf_counter() - t0
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    c = batcher.metrics.counters
+    assert c["hedges"] == 1 and c["hedge_wins"] == 1
+    assert elapsed < 0.4  # the hedge beat the 0.5s straggler
+
+
+# --------------------------------------------------------- integrity guard
+def test_corrupted_batch_quarantines_and_reexecutes_bit_exact():
+    plan = FaultPlan(seed=0, events=[FaultEvent("corrupt", replica=0, at_dispatch=0)])
+    engine, batcher = _setup(FaultPolicy(probe_backoff_s=100.0), plan)
+    xs = _samples(8)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    c = batcher.metrics.counters
+    assert c["corrupt_batches"] == 1 and c["quarantines"] == 1
+    assert batcher.pool.replicas[0].health.quarantine_reason.startswith("integrity")
+
+
+def test_disabled_policy_delivers_the_corruption_baseline():
+    """The A/B contract the chaos benchmark rests on: without the guard the
+    corrupted batch is delivered as-is."""
+    plan = FaultPlan(seed=0, events=[FaultEvent("corrupt", replica=0, at_dispatch=0)])
+    engine, batcher = _setup(FaultPolicy.disabled(), plan, n_replicas=1)
+    xs = _samples(4)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    got = np.stack([batcher.results[r].out for r in rids])
+    assert not np.array_equal(got, want)  # corrupted result reached a client
+
+
+# ------------------------------------------------------------ replica death
+def test_replica_death_fails_over_and_completes():
+    plan = FaultPlan(seed=0, events=[FaultEvent("die", replica=0, at_dispatch=0)])
+    engine, batcher = _setup(FaultPolicy(max_retries=3, probe_backoff_s=100.0),
+                             plan)
+    xs = _samples(12)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    assert batcher.pool.replicas[0].health.dead
+
+
+# ------------------------------------------------------------ canary probes
+def test_canary_probe_recovers_a_transiently_failing_replica():
+    plan = FaultPlan(seed=0, events=[
+        FaultEvent("error", replica=0, at_dispatch=k) for k in range(3)])
+    engine, batcher = _setup(FaultPolicy(max_retries=2, probe_backoff_s=0.01),
+                             plan, n_replicas=1)
+    rid = batcher.submit(_samples(1)[0])
+    batcher.drain(timeout=60)
+    assert batcher.results[rid].shed  # all three attempts hit the fault
+    pool = batcher.pool
+    for _ in range(100):
+        if pool.healthy_count:
+            break
+        time.sleep(0.01)
+        pool.maintain()
+    assert pool.healthy_count == 1 and pool.recoveries == 1
+    assert pool.replicas[0].health.recoveries == 1
+    # the recovered replica serves bit-exact again
+    x = _samples(2, seed=9)
+    rid2 = batcher.submit(x[0])
+    batcher.drain(timeout=60)
+    np.testing.assert_array_equal(
+        batcher.results[rid2].out, np.asarray(engine(jnp.asarray(x[:1])))[0])
+
+
+def test_deadline_aware_retry_sheds_instead_of_retrying_past_slo():
+    plan = FaultPlan(seed=0, events=[FaultEvent("error", replica=0, at_dispatch=0)])
+    _, batcher = _setup(FaultPolicy(max_retries=5), plan, n_replicas=1)
+    rid = batcher.submit(_samples(1)[0], deadline=1.0, now=0.0)
+    batcher.poll(now=2.0)  # past the deadline: launch fails, no retry
+    r = batcher.results[rid]
+    assert r.shed and batcher.metrics.counters["retries"] == 0
+    assert batcher.metrics.counters["shed"] == 1
+
+
+# ----------------------------------------------------------------- brownout
+def test_brownout_sheds_best_effort_and_shrinks_buckets():
+    policy = FaultPolicy(probe_backoff_s=100.0, brownout_cooldown_s=100.0)
+    engine, batcher = _setup(policy, buckets=(1, 4, 8))
+    be = batcher.submit_batch(_samples(2), tier=BEST_EFFORT)
+    for r in batcher.pool.replicas:
+        batcher.pool.quarantine(r, "test")
+    batcher.poll()  # healthy_frac 0 -> severe brownout
+    assert batcher.metrics.brownout_level == 2
+    assert batcher.active_buckets == (1, 4)  # largest bucket retired
+    # the queued best-effort work was dropped on entry
+    assert all(batcher.results[r].shed for r in be)
+    assert batcher.metrics.counters["brownout_shed"] == 2
+    # fresh best-effort arrivals shed at the front door, gold still lands
+    door = batcher.submit(_samples(1)[0], tier=BEST_EFFORT)
+    assert batcher.results[door].shed
+    x = _samples(1, seed=7)
+    gold = batcher.submit(x[0])
+    assert batcher.queue.depth == 1
+    batcher.drain(timeout=60)  # full quarantine: fallback dispatch serves gold
+    np.testing.assert_array_equal(
+        batcher.results[gold].out, np.asarray(engine(jnp.asarray(x)))[0])
+
+
+# --------------------------------------------------- zero-overhead-healthy
+def test_no_faults_means_no_fault_side_effects():
+    """Fault handling enabled + healthy replicas: bit-exact results, every
+    fault counter zero, availability 1.0 (the zero-overhead claim)."""
+    engine, batcher = _setup(FaultPolicy(hedging=True))
+    xs = _samples(13)
+    rids = batcher.submit_batch(xs)
+    batcher.drain(timeout=60)
+    want = np.asarray(engine(jnp.asarray(xs)))
+    for i, rid in enumerate(rids):
+        np.testing.assert_array_equal(batcher.results[rid].out, want[i])
+    c = batcher.metrics.counters
+    for key in ("dispatch_failures", "retries", "hedges", "hedge_wins",
+                "timeouts", "corrupt_batches", "quarantines", "probes",
+                "brownout_shed", "shed", "rejected"):
+        assert c[key] == 0, key
+    assert batcher.metrics.availability() == 1.0
+    snap = batcher.pool.health_snapshot()
+    assert snap["healthy"] == snap["total"] == 2
+
+
+def test_pick_skips_quarantined_replicas():
+    _, batcher = _setup(FaultPolicy(probe_backoff_s=100.0))
+    pool = batcher.pool
+    pool.quarantine(pool.replicas[0], "test")
+    rids = batcher.submit_batch(_samples(8))
+    batcher.drain(timeout=60)
+    assert pool.load()[0] == 0 and pool.load()[1] > 0
+    assert all(not batcher.results[r].shed for r in rids)
+
+
+def test_accelerator_serve_plumbs_fault_policy():
+    from repro.build import build
+
+    rng = np.random.default_rng(0)
+    raw = [Node("input", "in", {"shape": (24,), "bits": 2}),
+           Node("linear", "fc0", {},
+                {"w": jnp.asarray(rng.normal(0, 0.5, (8, 24)).astype(np.float32))})]
+    acc = build(raw, target="engine", verify="off", tune="off")
+    b = acc.serve(warmup=False, fault_policy=FaultPolicy.disabled())
+    assert not b.fault_policy.enabled and not b.pool.policy.enabled
+    b2 = acc.serve(warmup=False)
+    assert b2.fault_policy.enabled  # hardened by default

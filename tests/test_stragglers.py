@@ -1,0 +1,101 @@
+"""Shared trailing-median straggler detector (repro.distributed.stragglers)
+plus the StepWatchdog refactor onto it: one definition, two consumers
+(training watchdog, serving replica health), zero behavior change."""
+
+import numpy as np
+import pytest
+
+from repro.distributed.fault_tolerance import StepWatchdog
+from repro.distributed.stragglers import TrailingStats
+
+
+def test_trailing_stats_validates_args():
+    with pytest.raises(ValueError, match="window"):
+        TrailingStats(window=0)
+    with pytest.raises(ValueError, match="factor"):
+        TrailingStats(factor=1.0)
+
+
+def test_no_verdict_before_min_samples():
+    """Early observations are warmup noise: a 100x outlier inside the
+    min_samples window must not be flagged."""
+    s = TrailingStats(min_samples=8, factor=3.0)
+    flags = [s.observe(dt) for dt in [0.01] * 7 + [1.0]]
+    assert flags == [False] * 8  # the 8th tested against only 7 samples
+    assert s.threshold() is None or len(s) >= 8
+    assert s.stragglers == 0
+
+
+def test_outlier_tested_before_appended():
+    """The straggler is judged against the trailing window BEFORE joining
+    it -- one outlier never vouches for itself."""
+    s = TrailingStats(min_samples=4, factor=3.0)
+    for _ in range(8):
+        assert not s.observe(0.010)
+    assert s.threshold() == pytest.approx(0.030)
+    assert s.observe(0.050)  # 5x the trailing median: flagged
+    assert s.stragglers == 1
+    # the outlier is now IN the window but the median barely moves
+    assert s.median == pytest.approx(0.010)
+    assert not s.observe(0.012)
+
+
+def test_window_is_bounded_and_median_tracks_recent():
+    s = TrailingStats(window=4, min_samples=2, factor=3.0)
+    for dt in (1.0, 1.0, 1.0, 1.0, 5.0, 5.0, 5.0, 5.0):
+        s.observe(dt)
+    assert len(s) == 4
+    assert s.median == pytest.approx(5.0)  # old regime aged out
+
+
+def test_would_flag_is_pure():
+    s = TrailingStats(min_samples=2, factor=2.0)
+    s.observe(0.01), s.observe(0.01)
+    before = len(s)
+    assert s.would_flag(0.05) and not s.would_flag(0.015)
+    assert len(s) == before  # probe recorded nothing
+
+
+def test_ewma_smooths_toward_recent():
+    s = TrailingStats(ewma_alpha=0.5)
+    assert s.ewma == 0.0  # unarmed
+    s.observe(0.010)
+    assert s.ewma == pytest.approx(0.010)  # first sample seeds it
+    s.observe(0.030)
+    assert s.ewma == pytest.approx(0.020)
+
+
+def test_median_is_robust_where_mean_is_not():
+    """The design reason for the trailing median: one straggler in the
+    window must not drag the threshold up and mask the next one."""
+    s = TrailingStats(min_samples=4, factor=3.0, window=32)
+    for _ in range(8):
+        s.observe(0.010)
+    s.observe(1.0)  # a huge straggler lands in the window
+    assert s.stragglers == 1
+    assert s.observe(0.050)  # the NEXT straggler is still caught
+    assert s.stragglers == 2
+    mean = np.mean(list(s.times)[:-1])
+    assert 0.050 < 3.0 * mean  # a mean-based cutoff would have missed it
+
+
+def test_step_watchdog_unchanged_after_refactor():
+    """StepWatchdog semantics on the shared util are identical to the old
+    inline implementation: flag when dt > factor * trailing median with at
+    least 8 prior samples, then append."""
+    wd = StepWatchdog(window=16, straggler_factor=3.0)
+    for _ in range(8):
+        wd._stats.observe(0.010)
+    assert wd.stragglers == 0
+    assert wd._stats.observe(0.050)
+    assert wd.stragglers == 1
+    assert wd.median == pytest.approx(0.010)
+    assert wd.factor == 3.0 and len(wd.times) == 9
+
+
+def test_step_watchdog_context_manager_records():
+    wd = StepWatchdog(window=4, straggler_factor=50.0)
+    for _ in range(3):
+        with wd:
+            pass
+    assert len(wd.times) == 3 and wd.stragglers == 0
