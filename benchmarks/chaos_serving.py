@@ -26,6 +26,19 @@ once, and a guaranteed output corruption.  The committed claims
     and/or gold completion collapse) -- the A/B proof the hardening is
     load-bearing, not incidental.
 
+The hardened arm always runs with telemetry wired (a
+:class:`repro.telemetry.Tracer` plus a :class:`DriftMonitor`): the chaos
+run doubles as the observability acceptance test.  Two more gated claims:
+
+  * ``straggler_flagged`` >= 1: the scripted straggle on replica 1 is
+    flagged by the drift monitor (``flagged_ever`` latches even though
+    hedging hides the straggler's completion -- censored lower bounds),
+  * ``trace_fault_annotations`` >= 3: retries / hedges / timeouts /
+    corrupt batches / quarantines appear as instant events on the trace.
+
+``--trace PATH`` additionally exports the Chrome trace-event JSON
+(perfetto-viewable; CI uploads it as an artifact).
+
 The record embeds the full fault-plan JSON: re-running with it reproduces
 the identical fault schedule (draws are pure functions of
 ``(seed, replica, dispatch_index)``), which is what makes a chaos failure
@@ -33,6 +46,7 @@ on CI debuggable instead of a flake.
 
 Usage:
     python -m benchmarks.chaos_serving [--quick] [--soak] [--out PATH]
+                                       [--trace PATH]
 """
 
 from __future__ import annotations
@@ -56,13 +70,14 @@ from repro.serving import (
     FaultPolicy,
     ReplicaPool,
 )
+from repro.telemetry import DriftMonitor, Tracer
 
 POLL_SLEEP_S = 2e-4
 N_REPLICAS = 4
 
 
 def build_fault_plan(seed: int, t_exec: float, *, soak: bool = False) -> FaultPlan:
-    """Background chaos + three scripted catastrophes.  ``soak`` raises the
+    """Background chaos + four scripted catastrophes.  ``soak`` raises the
     background rates for the nightly long run."""
     scale = 2.0 if soak else 1.0
     return FaultPlan(
@@ -72,6 +87,13 @@ def build_fault_plan(seed: int, t_exec: float, *, soak: bool = False) -> FaultPl
         straggle_delay_s=max(6.0 * t_exec, 0.02),
         events=[
             FaultEvent("corrupt", replica=0, at_dispatch=1),
+            # the drift-monitor acceptance case: a scripted straggle well
+            # past the drift band (8x the calibrated max-bucket time; the
+            # dispatch timeout is 10x so it resolves, late) -- whether the
+            # late completion is observed directly or hidden by a winning
+            # hedge, replica 1 must end up in ``flagged_ever``
+            FaultEvent("straggle", replica=1, at_dispatch=1,
+                       delay_s=max(8.0 * t_exec, 0.03)),
             FaultEvent("hang", replica=2, at_dispatch=1),
             FaultEvent("die", replica=3, at_dispatch=2),
         ],
@@ -134,8 +156,12 @@ def evaluate(run: dict, batcher: ContinuousBatcher, tiers, want) -> dict:
     }
 
 
+FAULT_ANNOTATIONS = ("retry", "hedge", "timeout", "corrupt_batch",
+                     "quarantine", "dispatch_failure")
+
+
 def run(*, requests: int = 160, seed: int = 0, load: float = 0.25,
-        soak: bool = False,
+        soak: bool = False, trace: str | None = None,
         out: str | None = "experiments/bench/chaos_serving.json") -> dict:
     buckets = (1, 8, 32)
     acc = nid_accelerator(seed, target="serving",
@@ -164,18 +190,34 @@ def run(*, requests: int = 160, seed: int = 0, load: float = 0.25,
         probe_backoff_s=max(2.0 * t_exec, 0.01),
     )
 
-    def make_batcher(policy: FaultPolicy) -> ContinuousBatcher:
+    def make_batcher(policy: FaultPolicy, *, tracer=None,
+                     drift=None) -> ContinuousBatcher:
         pool = ReplicaPool(engine, devices=[device] * N_REPLICAS,
-                           faults=plan, policy=policy)
+                           faults=plan, policy=policy, tracer=tracer)
         return ContinuousBatcher(
             engine, batch_buckets=buckets, slo_s=slo_s, pool=pool,
             fault_policy=policy, cache=acc.cache,
             queue_capacity=max(256, requests),
-            result_capacity=max(8192, 4 * requests)).warmup()
+            result_capacity=max(8192, 4 * requests),
+            tracer=tracer, drift=drift).warmup()
 
-    hardened = make_batcher(hardened_policy)
+    # the hardened arm carries full telemetry (the chaos run doubles as the
+    # observability acceptance test); the baseline arm stays untraced
+    tracer = Tracer(capacity=1 << 18,
+                    meta={"benchmark": "chaos_serving", "seed": seed,
+                          "fault_seed": plan.seed})
+    drift = DriftMonitor()
+    hardened = make_batcher(hardened_policy, tracer=tracer, drift=drift)
     h_run = drive(hardened, xs, arrivals, tiers, horizon_s=horizon_s)
     h = evaluate(h_run, hardened, tiers, want)
+
+    flagged_ever = sorted(drift.flagged_ever())
+    annotations = {name: 0 for name in FAULT_ANNOTATIONS}
+    for ev in tracer.events():
+        if ev["ph"] == "i" and ev["name"] in annotations:
+            annotations[ev["name"]] += 1
+    if trace:
+        tracer.save(trace)
 
     baseline = make_batcher(FaultPolicy.disabled())
     b_run = drive(baseline, xs, arrivals, tiers, horizon_s=horizon_s)
@@ -206,11 +248,19 @@ def run(*, requests: int = 160, seed: int = 0, load: float = 0.25,
         "ceiling_only": ["corrupted_delivered"],
         "corrupted_delivered": h["corrupted_delivered"],
         "max_corrupted_delivered": 0,
-        "floor_only": ["gold_completion_rate", "baseline_failure_modes"],
+        "floor_only": ["gold_completion_rate", "baseline_failure_modes",
+                       "straggler_flagged", "trace_fault_annotations"],
         "gold_completion_rate": h["gold_completion_rate"],
         "min_gold_completion_rate": 0.99,
         "baseline_failure_modes": baseline_failure_modes,
         "min_baseline_failure_modes": 1,
+        # telemetry claims: the scripted straggle on replica 1 is flagged
+        # by the drift monitor, and the fault machinery is visible on the
+        # trace as instant annotations
+        "straggler_flagged": int("replica:1" in flagged_ever),
+        "min_straggler_flagged": 1,
+        "trace_fault_annotations": sum(annotations.values()),
+        "min_trace_fault_annotations": 3,
         # hardened-arm outcome ------------------------------------------
         "availability": h["availability"],
         "stuck_requests": h["stuck_requests"],
@@ -234,6 +284,12 @@ def run(*, requests: int = 160, seed: int = 0, load: float = 0.25,
         "baseline_wall_s": b_run["wall_s"],
         "t_exec_s": t_exec,
         "s_per_cycle": cal["s_per_cycle"],
+        # telemetry detail (informational) ------------------------------
+        "trace_annotations": annotations,
+        "trace_events": len(tracer),
+        "trace_dropped": tracer.dropped,
+        "drift_flagged_ever": flagged_ever,
+        "drift": drift.status(),
     }
     if out:
         out_dir = os.path.dirname(out)
@@ -256,13 +312,15 @@ def main() -> None:
     ap.add_argument("--soak", action="store_true",
                     help="nightly long run: more requests, higher fault rates")
     ap.add_argument("--out", default="experiments/bench/chaos_serving.json")
+    ap.add_argument("--trace", default=None,
+                    help="write the hardened arm's Chrome trace JSON here")
     args = ap.parse_args()
     requests = args.requests
     if requests is None:
         requests = 600 if args.soak else (128 if args.quick else 160)
     record = run(requests=requests, seed=args.seed, load=args.load,
-                 soak=args.soak, out=args.out)
-    pretty = {k: v for k, v in record.items() if k != "fault_plan"}
+                 soak=args.soak, trace=args.trace, out=args.out)
+    pretty = {k: v for k, v in record.items() if k not in ("fault_plan", "drift")}
     print(json.dumps(pretty, indent=2))
 
 

@@ -88,12 +88,12 @@ def run_engine_server(engine, xs, arrivals, *, buckets, flush_period_s):
             "stats": dict(server.stats)}
 
 
-def run_continuous(acc, xs, arrivals, *, buckets, slo_s):
+def run_continuous(acc, xs, arrivals, *, buckets, slo_s, tracer=None):
     """Open-loop drive of the serving subsystem: submit on arrival, poll
     continuously; the batcher decides every flush itself."""
     n = len(arrivals)
     batcher = acc.serve(batch_buckets=buckets, slo_s=slo_s,
-                        result_capacity=max(8192, n))
+                        result_capacity=max(8192, n), tracer=tracer)
     t0 = time.perf_counter()
     i = 0
     while i < n or batcher.outstanding:
@@ -149,7 +149,7 @@ def run_closed_loop(acc, xs, *, buckets, total, continuous):
 
 def run(*, requests: int = 1024, rounds: int = 3, rate_hz: float | None = None,
         slo_ms: float | None = None, seed: int = 0, load: float = 0.5,
-        closed_total: int | None = None,
+        closed_total: int | None = None, traced: bool = False,
         out: str | None = "experiments/bench/serving_load.json") -> dict:
     buckets = (1, 8, 32, 128)
     # the serving-target build calibrates the realized cycle time into the
@@ -175,12 +175,21 @@ def run(*, requests: int = 1024, rounds: int = 3, rate_hz: float | None = None,
     # paired rounds, median ratios: one scheduler stall landing on either
     # side would otherwise own the p99 of a single round (the same
     # one-sided-noise reasoning as autotune.paired_times)
+    # ``traced`` wires a live Tracer into the continuous arm's timed loop:
+    # the gated speedup / p99 ratios then hold WITH telemetry enabled (the
+    # dedicated overhead measurement is benchmarks.telemetry_overhead)
+    tracer = None
+    if traced:
+        from repro.telemetry import Tracer
+
+        tracer = Tracer(capacity=1 << 17,
+                        meta={"benchmark": "serving_load", "seed": seed})
     server_runs, serving_runs = [], []
     for _ in range(max(1, rounds)):
         server_runs.append(run_engine_server(
             engine, xs, arrivals, buckets=buckets, flush_period_s=slo_s))
         serving_runs.append(run_continuous(
-            acc, xs, arrivals, buckets=buckets, slo_s=slo_s))
+            acc, xs, arrivals, buckets=buckets, slo_s=slo_s, tracer=tracer))
 
     bit_exact = all(np.array_equal(sv["outs"], want)
                     and np.array_equal(se["outs"], want)
@@ -235,7 +244,11 @@ def run(*, requests: int = 1024, rounds: int = 3, rate_hz: float | None = None,
         "server_flushes": server_runs[0]["stats"]["flushes"],
         "serving_flushes": serving_runs[0]["snapshot"]["flushes"],
         "s_per_cycle": cal["s_per_cycle"],
+        "traced": bool(traced),
     }
+    if tracer is not None:
+        record["trace_events"] = len(tracer)
+        record["trace_dropped"] = tracer.dropped
     if out:
         out_dir = os.path.dirname(out)
         if out_dir:
@@ -260,6 +273,8 @@ def main() -> None:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--quick", action="store_true",
                     help="small request count (CI smoke)")
+    ap.add_argument("--traced", action="store_true",
+                    help="run the continuous arm with a live Tracer wired in")
     ap.add_argument("--out", default="experiments/bench/serving_load.json")
     args = ap.parse_args()
     requests = args.requests
@@ -269,7 +284,7 @@ def main() -> None:
 
     rec = run(requests=requests, rounds=args.rounds, rate_hz=args.rate,
               slo_ms=args.slo_ms, seed=args.seed, load=args.load,
-              closed_total=closed_total, out=args.out)
+              closed_total=closed_total, traced=args.traced, out=args.out)
     print(json.dumps(rec, indent=2))
     print(f"# serving p99 {rec['serving_p99_ms']:.2f}ms vs server p99 "
           f"{rec['server_p99_ms']:.2f}ms (ratio {rec['p99_vs_server']:.2f}); "

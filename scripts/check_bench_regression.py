@@ -137,8 +137,13 @@ def check_record(name: str, base: dict, fresh: dict, *,
                         + (" -- refresh the baseline" if side == "baseline" else ""))
     for key in ("fused_samples_per_s", "unfused_samples_per_s"):
         if key in base or key in fresh:
-            print(f"  {name}.{key}: baseline={base.get(key, float('nan')):.0f} "
-                  f"fresh={fresh.get(key, float('nan')):.0f}  (informational)")
+            # values may be None (e.g. a percentile over zero samples --
+            # ServingMetrics emits None, never NaN, to stay valid JSON)
+            def fmt(rec):
+                v = rec.get(key)
+                return "n/a" if v is None else f"{v:.0f}"
+            print(f"  {name}.{key}: baseline={fmt(base)} "
+                  f"fresh={fmt(fresh)}  (informational)")
     return errors
 
 
@@ -175,6 +180,8 @@ def main() -> int:
     # a benchmark silently escaped the gate (e.g. a forgotten git add)
     known = {p.name for p in baselines}
     for fresh_path in sorted(args.fresh_dir.glob("*.json")):
+        if fresh_path.name.endswith(".trace.json"):
+            continue  # Chrome trace artifacts ride along, ungated
         if fresh_path.name not in known:
             errors.append(
                 f"{fresh_path.name}: fresh record has no committed baseline "

@@ -40,6 +40,9 @@ class Accelerator:
         self.report: BuildReport = state.report
         self.cache = state.cache
         self.calibration = state.calibration
+        # build-step Tracer when cfg.telemetry was set (None otherwise);
+        # its summary is already embedded in report.telemetry
+        self.tracer = state.tracer
         self._engine = state.engine
         if self.config.output_dir:
             self.save_report()
@@ -64,9 +67,33 @@ class Accelerator:
     def __call__(self, x):
         return self.engine(x) if self._engine is not None else self.interpret(x)
 
-    def dispatch(self, x, *, params=None):
+    def dispatch(self, x, *, params=None, tracer=None):
         """Non-blocking engine submit (see ``FusedEngine.dispatch``)."""
-        return self.engine.dispatch(x, params=params)
+        return self.engine.dispatch(x, params=params, tracer=tracer)
+
+    def profile(self, x, tracer, *, drift=None):
+        """Traced per-node eager re-execution (``FusedEngine.profile``):
+        bit-exact with ``acc(x)``, one span per node, optionally feeding a
+        :class:`~repro.telemetry.DriftMonitor`."""
+        return self.engine.profile(x, tracer, drift=drift)
+
+    def drift_monitor(self, **kwargs):
+        """A :class:`~repro.telemetry.DriftMonitor` primed with this
+        build's per-stage predicted intervals (stage cycles x the
+        *calibrated* cycle time).  Requires a ``target="serving"`` build
+        (or any step list that ran ``calibrate``): against the nominal
+        clock the measured/predicted ratios are meaningless -- see
+        docs/observability.md."""
+        from repro.telemetry import DriftMonitor
+
+        s_per_cycle = (self.calibration or {}).get("s_per_cycle")
+        if not s_per_cycle:
+            raise BuildError(
+                "drift_monitor() needs a calibrated cycle time; rebuild "
+                "with target='serving' (the 'calibrate' step) so per-stage "
+                "predictions reflect measured seconds, not the nominal clock")
+        return DriftMonitor.from_schedule(
+            self.schedule, float(s_per_cycle), **kwargs)
 
     @property
     def schedule(self):
@@ -90,7 +117,9 @@ class Accelerator:
         the integrity guard and brownout; the default policy is enabled
         with conservative settings and adds no overhead while replicas are
         healthy.  ``faults`` injects a deterministic
-        :class:`~repro.serving.faults.FaultPlan` (chaos testing only)."""
+        :class:`~repro.serving.faults.FaultPlan` (chaos testing only).
+        ``tracer=``/``drift=`` (forwarded to the batcher) wire telemetry:
+        pair with :meth:`drift_monitor` for calibrated predictions."""
         from repro.serving import ContinuousBatcher
 
         batcher = ContinuousBatcher(
@@ -99,9 +128,9 @@ class Accelerator:
         return batcher.warmup() if warmup else batcher
 
     # ------------------------------------------------------------- pipeline
-    def as_pipeline(self, mesh, *, axis: str = "stage"):
+    def as_pipeline(self, mesh, *, axis: str = "stage", tracer=None):
         """Map the stage chain onto a device mesh (``FusedEngine.as_pipeline``)."""
-        return self.engine.as_pipeline(mesh, axis=axis)
+        return self.engine.as_pipeline(mesh, axis=axis, tracer=tracer)
 
     # --------------------------------------------------------------- report
     def report_path(self) -> str:

@@ -100,6 +100,9 @@ class BuildConfig:
     calibrate_reps: int = 3
     # verification + report
     verify: str = "all"
+    # telemetry: trace every build step with a repro.telemetry.Tracer and
+    # embed the span summary in the BuildReport (zero cost when False)
+    telemetry: bool = False
     probe_batch: int = 8
     seed: int = 0
     steps: Sequence[Any] | None = None

@@ -84,6 +84,9 @@ class BuildReport:
     # this design.  Empty dicts for standalone builds.
     sweep: dict = dataclasses.field(default_factory=dict)
     calibration: dict = dataclasses.field(default_factory=dict)
+    # build-step trace summary (``Tracer.summary()``) when the config ran
+    # with ``telemetry=True``; empty otherwise (old reports load fine)
+    telemetry: dict = dataclasses.field(default_factory=dict)
     predicted_interval_s: float | None = None
     measured_interval_s: float | None = None
     cycle_time_source: str = "nominal"  # "nominal" | "measured"

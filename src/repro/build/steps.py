@@ -67,6 +67,7 @@ class BuildState:
     cache: Any = None  # ScheduleCache once tune/calibrate need one
     engine: Any = None  # FusedEngine after the "engine" step
     calibration: dict | None = None  # cycle-time entry (serving target)
+    tracer: Any = None  # repro.telemetry.Tracer when cfg.telemetry
     ref_graph: Graph | None = None
     probe: Any = None
     probe_out: np.ndarray | None = None
@@ -436,13 +437,24 @@ def run_pipeline(graph: Graph, cfg: BuildConfig) -> BuildState:
         state.cache = cfg.cache if cfg.cache is not None else autotune.default_cache()
     elif cfg.cache is not None:
         state.cache = cfg.cache
+    tracer = None
+    if cfg.telemetry:
+        from repro.telemetry import Tracer
+
+        tracer = Tracer(meta={"build": cfg.name, "target": cfg.target})
     steps = cfg.steps if cfg.steps is not None else DEFAULT_STEPS[cfg.target]
     t_build = time.perf_counter()
     for step in steps:
         fn = resolve_step(step)
         name = step_name(step)
+        sp = (tracer.span(f"step.{name}", cat="build").__enter__()
+              if tracer is not None else None)
         t0 = time.perf_counter()
-        out = fn(state)
+        try:
+            out = fn(state)
+        finally:
+            if sp is not None:
+                sp.__exit__(None, None, None)
         if isinstance(out, BuildState):
             state = out
         elif isinstance(out, list):  # a custom step returned a graph
@@ -453,6 +465,9 @@ def run_pipeline(graph: Graph, cfg: BuildConfig) -> BuildState:
                     if cfg.verify != "off" else None)
         report.record_step(name, wall, verified, _op_histogram(state.graph))
     report.total_wall_s = time.perf_counter() - t_build
+    if tracer is not None:
+        report.telemetry = tracer.summary()
+        state.tracer = tracer
     if state.ref_graph is None and _executable(state.graph):
         state.ref_graph = state.graph
     return state

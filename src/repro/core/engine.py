@@ -176,7 +176,8 @@ class FusedEngine:
         ys = jax.lax.map(functools.partial(self._chain, params), xs)
         return ys.reshape(n_micro * mb, *ys.shape[2:])[:b]
 
-    def dispatch(self, x: jax.Array, *, params=None) -> tuple[jax.Array, StreamPlan]:
+    def dispatch(self, x: jax.Array, *, params=None,
+                 tracer=None) -> tuple[jax.Array, StreamPlan]:
         """Non-blocking submit: enqueue one batch, return the un-resolved
         device array plus the stream plan it runs under.
 
@@ -187,16 +188,76 @@ class FusedEngine:
         overrides the engine's resident parameters with a replica's copy
         (``repro.serving.pool`` places them per device); the computation
         runs wherever the committed operands live.
+
+        ``tracer`` (a :class:`repro.telemetry.Tracer`) records the host-side
+        enqueue as an ``engine.dispatch`` span -- the duration is submit
+        cost, not compute (the call does not block); per-node compute spans
+        come from :meth:`profile`.
         """
         plan = self.plan(int(x.shape[0]))
-        out = self._jit(self.params if params is None else params, x, plan.n_micro)
+        params = self.params if params is None else params
+        if tracer is None:
+            return self._jit(params, x, plan.n_micro), plan
+        with tracer.span("engine.dispatch", cat="engine",
+                         batch=int(x.shape[0]), n_micro=plan.n_micro,
+                         microbatch=plan.microbatch,
+                         interval_cycles=plan.interval_cycles):
+            out = self._jit(params, x, plan.n_micro)
         return out, plan
+
+    def profile(self, x: jax.Array, tracer, *, drift=None
+                ) -> tuple[jax.Array, StreamPlan]:
+        """Instrumented run: per-node, per-microbatch duration spans.
+
+        The jit'd :meth:`dispatch` path is one fused program -- XLA leaves
+        no per-node boundary to time -- so profiling re-runs the SAME node
+        runners (``dataflow.node_runner``, the definitions the fused chain
+        traced) eagerly per microbatch, blocking after each node.  Every op
+        is per-sample, so the output is bit-exact with :meth:`dispatch`;
+        only the timing differs (each node pays its own dispatch, which is
+        the point).  Span tree::
+
+            engine.profile
+              micro0
+                <node name>   one span per graph node, cat="node"
+              micro1
+                ...
+
+        ``drift`` (a :class:`repro.telemetry.DriftMonitor`) receives each
+        node span duration keyed by node name -- with predictions from
+        ``DriftMonitor.from_schedule(engine.schedule, s_per_cycle)`` this
+        compares measured per-node intervals against the calibrated cycle
+        model online.
+        """
+        b = int(x.shape[0])
+        plan = self.plan(b)
+        mb = plan.microbatch
+        pad = plan.n_micro * mb - b
+        xp = jnp.pad(x, [(0, pad)] + [(0, 0)] * (x.ndim - 1)) if pad else x
+        xs = xp.reshape(plan.n_micro, mb, *x.shape[1:])
+        outs = []
+        with tracer.span("engine.profile", cat="engine", batch=b,
+                         n_micro=plan.n_micro, microbatch=mb):
+            for m in range(plan.n_micro):
+                with tracer.span(f"micro{m}", cat="engine"):
+                    env: dict = {}
+                    for name, ins, p, fn in zip(self._names, self._in_names,
+                                                self.params, self._fns):
+                        with tracer.span(name, cat="node", micro=m) as sp:
+                            args = ((xs[m],) if not ins
+                                    else tuple(env[s] for s in ins))
+                            env[name] = jax.block_until_ready(fn(p, *args))
+                        if drift is not None:
+                            drift.observe(name, sp.dur)
+                    outs.append(env[self._out_name])
+        y = jnp.concatenate(outs)[:b]
+        return y, plan
 
     def __call__(self, x: jax.Array) -> jax.Array:
         return self.dispatch(x)[0]
 
     # ---------------------------------------------------------- multi-device
-    def as_pipeline(self, mesh, *, axis: str = "stage"):
+    def as_pipeline(self, mesh, *, axis: str = "stage", tracer=None):
         """Map stages onto mesh devices, one layer range per device, reusing
         :func:`repro.distributed.pipeline.pipeline_apply` (ppermute links as
         the AXI streams).
@@ -206,8 +267,20 @@ class FusedEngine:
         breaks stacking) with a uniform epilogue.  Heterogeneous graphs run
         single-device via ``__call__``.  Returns ``run(xs)`` taking
         microbatched input ``(n_micro, mb, K)``.
+
+        With ``tracer``, each ``run`` records a ``pipeline.run`` span plus
+        reconstructed per-stage occupancy lanes: the schedule is one fused
+        XLA program (nothing to time inside), so the measured wall interval
+        is overlaid with the static GPipe schedule -- busy ``microN`` spans
+        and ``bubble`` fill/drain spans per stage, with the occupancy
+        fraction in the span args (see
+        :func:`repro.distributed.pipeline.emit_schedule_spans`).
         """
-        from repro.distributed.pipeline import pipeline_apply, stage_params_split
+        from repro.distributed.pipeline import (
+            emit_schedule_spans,
+            pipeline_apply,
+            stage_params_split,
+        )
         from repro.kernels import ops as kops
 
         non_input = [n for n in self.graph if n.op != "input"]
@@ -237,6 +310,19 @@ class FusedEngine:
         stage_params = stage_params_split(stacked, n_stages)
 
         def run(xs: jax.Array) -> jax.Array:
-            return pipeline_apply(layer_fn, stage_params, xs, mesh, axis=axis)
+            if tracer is None:
+                return pipeline_apply(layer_fn, stage_params, xs, mesh,
+                                      axis=axis)
+            n_micro = int(xs.shape[0])
+            with tracer.span("pipeline.run", cat="pipeline",
+                             n_stages=n_stages, n_micro=n_micro) as sp:
+                out = jax.block_until_ready(
+                    pipeline_apply(layer_fn, stage_params, xs, mesh, axis=axis)
+                )
+            occ = emit_schedule_spans(tracer, n_stages, n_micro,
+                                      sp.t0, sp.t1)
+            sp.args.update(occupancy=occ["occupancy"],
+                           bubble_ticks=occ["bubble_ticks_per_stage"])
+            return out
 
         return run

@@ -103,6 +103,52 @@ def pipeline_apply(
     return stacked[(n_stages - 1) * n_micro :]
 
 
+def pipeline_occupancy(n_stages: int, n_micro: int) -> dict:
+    """Static GPipe schedule accounting: ticks, bubbles, occupancy.
+
+    The schedule runs ``n_micro + n_stages - 1`` ticks; each stage computes
+    for ``n_micro`` of them and idles through ``n_stages - 1`` fill/drain
+    bubbles -- the paper's pipeline-fill latency term, counted in ticks
+    instead of cycles.  ``occupancy`` is the busy fraction per stage.
+    """
+    ticks = n_micro + n_stages - 1
+    bubble = n_stages - 1
+    return {
+        "n_stages": n_stages,
+        "n_micro": n_micro,
+        "ticks": ticks,
+        "bubble_ticks_per_stage": bubble,
+        "occupancy": n_micro / ticks if ticks else 0.0,
+    }
+
+
+def emit_schedule_spans(tracer, n_stages: int, n_micro: int,
+                        t0: float, t1: float) -> dict:
+    """Reconstruct the per-stage GPipe timeline as trace lanes.
+
+    Spans inside ``shard_map``/``jit`` cannot be recorded (the schedule is
+    one fused XLA program), so the executor measures the wall interval
+    ``[t0, t1]`` and lays the *static* schedule over it: tick width
+    ``(t1-t0)/ticks``, stage ``s`` busy with microbatch ``m`` during tick
+    ``s + m``, idle ticks emitted as ``bubble`` spans.  One lane
+    (``stageN``) per stage; returns the occupancy accounting.
+    """
+    occ = pipeline_occupancy(n_stages, n_micro)
+    tick_s = (t1 - t0) / occ["ticks"]
+    for s in range(n_stages):
+        lane = f"stage{s}"
+        for tick in range(occ["ticks"]):
+            m = tick - s
+            a, b = t0 + tick * tick_s, t0 + (tick + 1) * tick_s
+            if 0 <= m < n_micro:
+                tracer.emit_span(f"micro{m}", a, b, cat="pipeline",
+                                 tid=lane, stage=s, micro=m, tick=tick)
+            else:
+                tracer.emit_span("bubble", a, b, cat="pipeline",
+                                 tid=lane, stage=s, tick=tick)
+    return occ
+
+
 def sequential_reference(layer_fn, params_stacked, x):
     """Oracle: run all layers sequentially on every microbatch."""
 

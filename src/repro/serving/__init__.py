@@ -15,9 +15,10 @@ honors the same contract at the front door:
 * :mod:`repro.serving.pool` -- multi-replica pool (params ``device_put``
   onto each local device, least-loaded async dispatch, blocking only at
   result resolution),
-* :mod:`repro.serving.metrics` -- p50/p95/p99 latency, throughput,
-  queue-depth, padding, fault/retry/hedge/quarantine and availability
-  counters with a snapshot API,
+* :mod:`repro.serving.metrics` -- thread-safe p50/p95/p99 latency
+  (log-bucketed histogram), throughput + windowed rates, queue-depth,
+  padding, fault/retry/hedge/quarantine and availability counters with
+  JSON ``snapshot()`` and Prometheus text ``prometheus()`` exposition,
 * :mod:`repro.serving.faults` -- deterministic seeded fault injection
   (:class:`FaultPlan`) plus the output integrity guard (the chaos-test
   substrate), and
@@ -35,6 +36,15 @@ Quickstart::
     while batcher.pop_result(rid) is None:
         batcher.poll()                 # harvest + SLO-aware flushing
     print(batcher.metrics.snapshot())  # p99, throughput, padding overhead
+
+Observability (see docs/observability.md): every component takes
+``tracer=None`` (a :class:`repro.telemetry.Tracer`) and the batcher takes
+``drift=None`` (a :class:`repro.telemetry.DriftMonitor`); with both wired
+a run yields a perfetto-viewable Chrome trace of the full request
+lifecycle -- admit, dispatch, resolve, retries/hedges/quarantines as
+annotated events -- plus live measured-vs-predicted cycle-model drift per
+replica.  ``None`` costs one identity test per site (zero overhead
+disabled).
 
 The legacy ``repro.launch.serve.EngineServer`` is a thin deprecated shim
 over this package.

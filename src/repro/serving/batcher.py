@@ -175,6 +175,21 @@ class ContinuousBatcher:
         pre-hardening behavior.
     faults: optional :class:`~repro.serving.faults.FaultPlan` injected
         into the pool (chaos testing); ignored when ``pool`` is given.
+    tracer: optional :class:`repro.telemetry.Tracer`.  Records the full
+        request lifecycle -- an async ``request`` interval per rid from
+        admission to resolution, ``dispatch``/``resolve`` duration spans,
+        and ``retry``/``hedge``/``timeout``/``corrupt_batch`` instants
+        (quarantine/probe/brownout instants come from the pool and the
+        brownout controller, which share this tracer when the batcher
+        constructs them).  ``None`` (the default) costs one identity test
+        per site -- the zero-overhead-when-disabled contract.
+    drift: optional :class:`repro.telemetry.DriftMonitor`.  Every resolved
+        launch contributes a measured-vs-predicted observation keyed
+        ``replica:N`` (predicted = the launch plan's ``n_micro`` x
+        ``interval_s``, the same cycle-model arithmetic the flush budgets
+        use); hedged-away, abandoned and timed-out launches contribute
+        *censored* lower bounds, so a straggling replica is flagged even
+        when hedging hides its completions.
     """
 
     def __init__(self, engine, *, batch_buckets: tuple[int, ...] = (1, 8, 32, 128),
@@ -185,23 +200,30 @@ class ContinuousBatcher:
                  queue_capacity: int | None = None, policy: str = "reject",
                  result_capacity: int = 8192, clock=time.perf_counter,
                  fault_policy: FaultPolicy | None = None,
-                 faults=None):
+                 faults=None, tracer=None, drift=None):
         if not batch_buckets or any(b <= 0 for b in batch_buckets):
             raise ValueError(f"need positive bucket sizes, got {batch_buckets}")
         self.engine = engine
         self.buckets = tuple(sorted(set(batch_buckets)))
         self.spec = InputSpec.from_graph(engine.graph)
         self._clock = clock
+        self.tracer = tracer
+        self.drift = drift
         self.metrics = metrics if metrics is not None else ServingMetrics(clock=clock)
         if queue_capacity is None:
             queue_capacity = 8 * self.buckets[-1]
         self.queue = queue if queue is not None else AdmissionQueue(
             self.spec, capacity=queue_capacity, policy=policy,
-            default_slo_s=slo_s, clock=clock)
+            default_slo_s=slo_s, clock=clock, tracer=tracer)
         self.fault_policy = fault_policy if fault_policy is not None else FaultPolicy()
         self.pool = pool if pool is not None else ReplicaPool(
-            engine, clock=clock, faults=faults, policy=self.fault_policy)
-        self._brownout = BrownoutController(self.fault_policy)
+            engine, clock=clock, faults=faults, policy=self.fault_policy,
+            tracer=tracer)
+        if pool is not None and tracer is not None and pool.tracer is None:
+            # a caller-built pool joins the batcher's trace unless it
+            # already carries its own tracer
+            pool.tracer = tracer
+        self._brownout = BrownoutController(self.fault_policy, tracer=tracer)
         self.greedy_when_idle = greedy_when_idle
         if interval_s is None:
             interval_s = dataflow.interval_seconds(engine.schedule, cache=cache)
@@ -224,6 +246,7 @@ class ContinuousBatcher:
         self.result_capacity = result_capacity
         self.results: dict[int, CompletedRequest] = {}
         self.shed: list[int] = []
+        self._depth_emitted: int | None = None  # last queue_depth counter sample
 
     def warmup(self) -> "ContinuousBatcher":
         """Precompile every bucket shape on every replica (startup cost,
@@ -241,8 +264,12 @@ class ContinuousBatcher:
             rid = self.queue.admit(x, deadline=deadline, now=now, tier=tier)
         except QueueFull:
             self.metrics.count("rejected")
+            if self.tracer is not None:
+                self.tracer.instant("reject", cat="request", tier=tier)
             raise
         self.metrics.count("requests")
+        if self.tracer is not None:
+            self.tracer.begin_async("request", rid, cat="request", tier=tier)
         self._note_shed(now)
         self.metrics.observe_depth(self.queue.depth)
         return rid
@@ -257,8 +284,15 @@ class ContinuousBatcher:
                                           tier=tier)
         except QueueFull:
             self.metrics.count("rejected", np.asarray(xs).shape[0])
+            if self.tracer is not None:
+                self.tracer.instant("reject", cat="request", tier=tier,
+                                    n=int(np.asarray(xs).shape[0]))
             raise
         self.metrics.count("requests", len(rids))
+        if self.tracer is not None:
+            for rid in rids:
+                self.tracer.begin_async("request", rid, cat="request",
+                                        tier=tier)
         self._note_shed(now)
         self.metrics.observe_depth(self.queue.depth)
         return rids
@@ -271,6 +305,9 @@ class ContinuousBatcher:
         rids = self.queue.take_rids(n)
         dl = deadline if deadline is not None else np.inf
         for rid in rids:
+            if self.tracer is not None:
+                self.tracer.begin_async("request", rid, cat="request",
+                                        tier=BEST_EFFORT, t=now)
             self._record(CompletedRequest(rid, None, now, now, dl))
         self.shed.extend(rids)
         self.metrics.count("requests", n)
@@ -324,9 +361,21 @@ class ContinuousBatcher:
         bucket = self.bucket_for(len(entries))
         padded = self._pad(xs, len(entries))
         try:
-            pending = self.pool.dispatch(padded, entries, n_valid=len(entries))
-        except (DispatchError, NoHealthyReplicas):
+            if self.tracer is None:
+                pending = self.pool.dispatch(padded, entries,
+                                             n_valid=len(entries))
+            else:
+                with self.tracer.span("dispatch", cat="serving",
+                                      bucket=bucket, n=len(entries)) as sp:
+                    pending = self.pool.dispatch(padded, entries,
+                                                 n_valid=len(entries))
+                    sp.args["replica"] = pending.replica.index
+        except (DispatchError, NoHealthyReplicas) as e:
             self.metrics.count("dispatch_failures")
+            if self.tracer is not None:
+                self.tracer.instant("dispatch_failure", cat="serving",
+                                    bucket=bucket, n=len(entries),
+                                    replica=getattr(e, "replica", None))
             self._requeue(entries, xs, self._clock() if now is None else now)
             return None
         flight = _Flight(entries, xs, pending)
@@ -369,6 +418,9 @@ class ContinuousBatcher:
         backoff = policy.retry_backoff_s * (2 ** (attempts - 1))
         self._retry.append((now + backoff, keep_entries, xs[keep_rows]))
         self.metrics.count("retries", len(keep_entries))
+        if self.tracer is not None:
+            self.tracer.instant("retry", cat="serving", n=len(keep_entries),
+                                attempts=attempts, backoff_s=backoff)
 
     def _launch_retries(self, now: float) -> None:
         """Re-dispatch every retry batch whose backoff has elapsed."""
@@ -400,7 +452,24 @@ class ContinuousBatcher:
         if (self.fault_policy.enabled and t is not None
                 and loser.age(now) > t):
             self.pool.quarantine(loser.replica, "timed out (lost hedge race)")
+        # the loser's true duration is unobservable from here on; its age is
+        # a censored lower bound the drift monitor can still learn from
+        self._drift_censored(loser, now)
         loser.abandon()
+
+    # ------------------------------------------------------- drift plumbing
+    def _predicted_s(self, pending: PendingBatch) -> float:
+        """Cycle-model prediction for one launch: the plan's microbatch
+        count times the calibrated steady-state interval -- the same
+        arithmetic the flush budgets use (without the safety factor)."""
+        return max(pending.plan.n_micro, 1) * self.interval_s
+
+    def _drift_censored(self, pending: PendingBatch, now: float) -> None:
+        if self.drift is not None:
+            self.drift.observe(f"replica:{pending.replica.index}",
+                               pending.age(now),
+                               predicted_s=self._predicted_s(pending),
+                               censored=True)
 
     def _maybe_hedge(self, flight: _Flight, now: float) -> None:
         if flight.hedge is not None or len(self.pool) < 2:
@@ -415,6 +484,15 @@ class ContinuousBatcher:
                 n_valid=len(flight.entries),
                 exclude=(flight.primary.replica.index,))
             self.metrics.count("hedges")
+            if self.tracer is not None:
+                self.tracer.instant(
+                    "hedge", cat="serving",
+                    primary=flight.primary.replica.index,
+                    hedge=flight.hedge.replica.index,
+                    primary_age_s=flight.primary.age(now))
+            # hedge-worthiness itself is drift evidence: the primary has
+            # already run ``delay`` without resolving, a censored bound
+            self._drift_censored(flight.primary, now)
         except (DispatchError, NoHealthyReplicas):
             self.metrics.count("dispatch_failures")
 
@@ -438,8 +516,20 @@ class ContinuousBatcher:
             for pending in flight.pendings():
                 if not pending.ready(now):
                     continue
-                ys = pending.resolve()
+                if self.tracer is None:
+                    ys = pending.resolve()
+                else:
+                    with self.tracer.span(
+                            "resolve", cat="serving",
+                            replica=pending.replica.index,
+                            n=len(flight.entries),
+                            hedged=pending is flight.hedge):
+                        ys = pending.resolve()
                 latency = now - pending.t_dispatch
+                if self.drift is not None:
+                    self.drift.observe(f"replica:{pending.replica.index}",
+                                       latency,
+                                       predicted_s=self._predicted_s(pending))
                 reason = self._check(ys)
                 if reason is None:
                     self.pool.note_result(pending, latency, ok=True)
@@ -453,6 +543,10 @@ class ContinuousBatcher:
                     break
                 # corrupted batch: quarantine the replica, never deliver
                 self.metrics.count("corrupt_batches")
+                if self.tracer is not None:
+                    self.tracer.instant("corrupt_batch", cat="serving",
+                                        replica=pending.replica.index,
+                                        reason=reason)
                 self.pool.note_result(pending, latency, ok=False,
                                       reason=f"integrity: {reason}")
                 progressed = True
@@ -475,8 +569,16 @@ class ContinuousBatcher:
                     self.pool.quarantine(
                         p.replica,
                         f"dispatch timed out after {timeout:.3g}s")
+                    # the hang's duration is unbounded; its age at timeout
+                    # is the censored lower bound we get to keep
+                    self._drift_censored(p, now)
                     p.abandon()
                 self.metrics.count("timeouts")
+                if self.tracer is not None:
+                    self.tracer.instant(
+                        "timeout", cat="serving", timeout_s=timeout,
+                        replicas=[p.replica.index
+                                  for p in flight.pendings()])
                 self._requeue(flight.entries, flight.xs, now)
                 progressed = True
                 continue
@@ -546,6 +648,13 @@ class ContinuousBatcher:
     def _maintain(self, now: float) -> None:
         """Health upkeep: canary probes for due quarantined replicas, pool
         counter sync, and one brownout-controller tick."""
+        if self.tracer is not None:
+            # change-triggered counter track (not per-tick: a busy poll loop
+            # would otherwise flood the bounded trace buffer with no-ops)
+            depth = self.queue.depth
+            if depth != self._depth_emitted:
+                self.tracer.counter("queue_depth", depth, cat="serving")
+                self._depth_emitted = depth
         if not self.fault_policy.enabled:
             return
         self.pool.maintain(now)
@@ -608,6 +717,10 @@ class ContinuousBatcher:
 
     # --------------------------------------------------------------- results
     def _record(self, req: CompletedRequest) -> None:
+        if self.tracer is not None:
+            self.tracer.end_async("request", req.rid, cat="request",
+                                  t=req.t_done, shed=req.shed,
+                                  missed_deadline=bool(req.missed_deadline))
         self.results[req.rid] = req
         while len(self.results) > self.result_capacity:
             self.results.pop(next(iter(self.results)))  # evict oldest

@@ -228,10 +228,13 @@ class BrownoutController:
     requires the pressure gone for ``brownout_cooldown_s`` (hysteresis --
     flapping between levels would churn the jit bucket grid)."""
 
-    def __init__(self, policy: FaultPolicy):
+    def __init__(self, policy: FaultPolicy, *, tracer=None):
         self.policy = policy
         self.level = 0
         self._calm_since: float | None = None
+        # repro.telemetry.Tracer or None: level transitions are instants
+        # (entering brownout is exactly the event an operator scrubs for)
+        self.tracer = tracer
 
     def update(self, *, healthy_frac: float, depth_frac: float,
                now: float) -> int:
@@ -240,6 +243,7 @@ class BrownoutController:
         if not (p.enabled and p.brownout):
             self.level = 0
             return 0
+        before = self.level
         want = 0
         if healthy_frac <= p.brownout_healthy_frac or depth_frac >= p.brownout_depth_frac:
             want = 1
@@ -256,6 +260,10 @@ class BrownoutController:
             elif now - self._calm_since >= p.brownout_cooldown_s:
                 self.level = want
                 self._calm_since = None
+        if self.tracer is not None and self.level != before:
+            self.tracer.instant("brownout", cat="health", level=self.level,
+                                previous=before, healthy_frac=healthy_frac,
+                                depth_frac=depth_frac)
         return self.level
 
     @property

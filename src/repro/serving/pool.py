@@ -142,7 +142,7 @@ class ReplicaPool:
 
     def __init__(self, engine, devices: list[jax.Device] | None = None, *,
                  clock=time.perf_counter, faults: FaultPlan | None = None,
-                 policy: FaultPolicy | None = None):
+                 policy: FaultPolicy | None = None, tracer=None):
         devices = list(devices) if devices is not None else jax.local_devices()
         if not devices:
             raise ValueError("need at least one device for the replica pool")
@@ -150,6 +150,9 @@ class ReplicaPool:
         self._clock = clock
         self.policy = policy if policy is not None else FaultPolicy()
         self.faults = faults
+        # repro.telemetry.Tracer or None; every emission is guarded so the
+        # disabled (None) pool pays one attribute test, nothing more
+        self.tracer = tracer
         self.replicas = [
             Replica(i, d, jax.device_put(engine.params, d),
                     health=ReplicaHealth(self.policy))
@@ -233,7 +236,13 @@ class ReplicaPool:
                 f"(dispatch #{k})", replica=replica.index)
         try:
             x = jax.device_put(jnp.asarray(xs), replica.device)
-            out, plan = self.engine.dispatch(x, params=replica.params)
+            # only pass tracer= when live: duck-typed engines (tests
+            # monkeypatch dispatch) need not grow the keyword to stay usable
+            if self.tracer is None:
+                out, plan = self.engine.dispatch(x, params=replica.params)
+            else:
+                out, plan = self.engine.dispatch(x, params=replica.params,
+                                                 tracer=self.tracer)
         except Exception as e:  # a *real* submit failure
             self._record_failure(replica, f"dispatch raised: {e}")
             raise DispatchError(
@@ -255,6 +264,9 @@ class ReplicaPool:
         replica.health.record_failure(self._clock(), reason)
         if replica.health.state == QUARANTINED and before != QUARANTINED:
             self.quarantines += 1
+            if self.tracer is not None:
+                self.tracer.instant("quarantine", cat="health",
+                                    replica=replica.index, reason=reason)
 
     # ------------------------------------------------------- health plumbing
     def note_result(self, pending: PendingBatch, latency_s: float,
@@ -275,6 +287,9 @@ class ReplicaPool:
             return
         if replica.health.state != QUARANTINED:
             self.quarantines += 1
+            if self.tracer is not None:
+                self.tracer.instant("quarantine", cat="health",
+                                    replica=replica.index, reason=reason)
         replica.health.quarantine(self._clock(), reason)
 
     # --------------------------------------------------------- canary probes
@@ -306,18 +321,29 @@ class ReplicaPool:
                                     exclude=tuple(r.index for r in self.replicas
                                                   if r is not replica))
         except (DispatchError, NoHealthyReplicas):
-            return bool(replica.health.note_probe(False, self._clock()))
+            recovered = bool(replica.health.note_probe(False, self._clock()))
+            if self.tracer is not None:
+                self.tracer.instant("probe", cat="health",
+                                    replica=replica.index, ok=False,
+                                    recovered=recovered)
+            return recovered
         deadline = self._clock() + timeout_s
+        ok = True
         while not pending.ready():
             if self._clock() >= deadline:
                 pending.abandon()
-                return bool(replica.health.note_probe(False, self._clock()))
+                ok = False
+                break
             time.sleep(min(1e-4, timeout_s / 10))
-        got = pending.resolve()
-        ok = bool(np.array_equal(got, want))
+        if ok:
+            got = pending.resolve()
+            ok = bool(np.array_equal(got, want))
         recovered = replica.health.note_probe(ok, self._clock())
         if recovered:
             self.recoveries += 1
+        if self.tracer is not None:
+            self.tracer.instant("probe", cat="health", replica=replica.index,
+                                ok=ok, recovered=recovered)
         return recovered
 
     def maintain(self, now: float | None = None) -> list[dict]:

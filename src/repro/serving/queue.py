@@ -146,7 +146,7 @@ class AdmissionQueue:
 
     def __init__(self, spec: InputSpec, *, capacity: int = 1024,
                  policy: str = "reject", default_slo_s: float | None = None,
-                 clock=time.perf_counter):
+                 clock=time.perf_counter, tracer=None):
         if capacity <= 0:
             raise ValueError(f"capacity must be positive, got {capacity}")
         if policy not in self.POLICIES:
@@ -156,6 +156,10 @@ class AdmissionQueue:
         self.policy = policy
         self.default_slo_s = default_slo_s
         self._clock = clock
+        # repro.telemetry.Tracer or None (zero overhead when None): the
+        # queue annotates the timeline where IT drops work -- overflow
+        # eviction and tier sheds -- since those never reach a dispatch span
+        self.tracer = tracer
         self._blocks: collections.deque[Block] = collections.deque()
         self._depth = 0
         self._next_rid = 0
@@ -201,6 +205,9 @@ class AdmissionQueue:
             self.shed_entries.extend(head.entries())
             self._depth -= drop
             self._min_dirty = True
+            if self.tracer is not None:
+                self.tracer.instant("queue.evict", cat="serving", n=drop,
+                                    rids=[head.rids[0], head.rids[-1]])
             if len(tail):
                 self._blocks[0] = tail
             else:
@@ -255,6 +262,9 @@ class AdmissionQueue:
         if dropped:
             self._blocks = kept
             self._min_dirty = True
+            if self.tracer is not None:
+                self.tracer.instant("queue.shed_tier", cat="serving",
+                                    tier=tier, n=dropped)
         return dropped
 
     # ------------------------------------------------------------------ pop
