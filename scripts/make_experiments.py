@@ -407,19 +407,33 @@ def section_explore(w, explore, figs):
       f"`python -m repro.explore --config nid_mlp --quick`.\n")
     if figs.get("interval"):
         w(f"![interval vs folding]({figs['interval']})\n")
-    w("| point | PE tgt | SIMD tgt | interval cyc | samples/s | LUT B | "
-      "FF B | BRAM B | Pareto |")
-    w("|---|---|---|---|---|---|---|---|---|")
-    for p in sorted(explore["points"], key=lambda r: r["pe_simd_product"]):
+    w("| point | PE tgt | SIMD tgt | packed | interval cyc | samples/s "
+      "| LUT B | FF B | BRAM B | weight B | Pareto |")
+    w("|---|---|---|---|---|---|---|---|---|---|---|")
+    for p in sorted(explore["points"],
+                    key=lambda r: (r["pe_simd_product"], r.get("packed", False))):
         w(f"| {p['point_id']} | {p['pe_target']} | {p['simd_target']} "
+          f"| {'yes' if p.get('packed') else 'no'} "
           f"| {p['interval_cycles']} | {p['samples_per_s']:.0f} "
           f"| {p['lut_bytes']} | {p['ff_bytes']} | {p['bram_bytes']} "
+          f"| {p.get('weight_bytes', '—')} "
           f"| {'**yes**' if p['pareto'] else 'no'} |")
     w(f"\nPareto frontier (maximize throughput, minimize LUT/FF/BRAM "
-      f"analogs): {', '.join(f'`{p}`' for p in explore['pareto_front'])}. "
+      f"analogs and HBM-resident weight bytes): "
+      f"{', '.join(f'`{p}`' for p in explore['pareto_front'])}. "
       f"The frontier keeps both extremes — minimal-area fully-folded points "
       f"and the wide low-interval designs — exactly the paper's "
       f"area-vs-throughput trade-off curve.\n")
+    if explore.get("packed_points"):
+        w(f"The sweep crosses the weight-storage axis into the grid "
+          f"(`packings` {explore['grid'].get('packings')}): "
+          f"{explore['packed_points']}/{explore['n_points']} points built "
+          f"with `pack=\"always\"` (bit-packed weights + packed datapath), "
+          f"and {explore['packed_pareto_points']} of them land on the "
+          f"frontier — a packed point strictly dominates its unpacked twin "
+          f"on weight bytes at equal folding, so the packing axis is gated "
+          f"to keep ≥{explore.get('min_packed_pareto_points', 1)} frontier "
+          f"point (`floor_only`).\n")
 
     cal = explore.get("calibration") or {}
     if cal:
@@ -531,14 +545,52 @@ def section_autotune(w):
                 kk = v["block_kw"]
             else:
                 kk = v["block_k"]
+            be = v["backend"] + (" (packed)" if v.get("packed") else "")
             w(f"| `{key}` | ({v['block_m']}, {v['block_n']}, {kk}) "
-              f"| {v['backend']} | {v['speedup']:.2f}x |")
+              f"| {be} | {v['speedup']:.2f}x |")
         for key, v in [(k, v) for k, v in sched.items()
                        if k.startswith("engine|")]:
             w(f"\nEngine-level: microbatch tile {v['microbatch']} "
               f"(tuned at batch {v['batch']}, {v['speedup']:.2f}x over "
               f"the heuristic plan).")
         w("")
+
+
+def section_packed(w):
+    gain = _load("experiments/bench/packed_gain.json")
+    if not gain:
+        return
+    w("\n## Bit-packed XNOR/popcount datapath — packed vs canonical\n")
+    w("`repro.kernels.mvu_packed` stores binarized weights as uint32 "
+      "bitplanes (32 weights/word, the paper's Fig. 4a SIMD lane packing) "
+      "and 2-bit weights as four-per-byte int8 lanes; the `pack_weights` "
+      "build step rewrites storage after tuning, and the autotuner "
+      "carries a packed-vs-unpacked axis per node (`\"packed\"` in the "
+      "ScheduleCache entry, `|packed` key suffix). "
+      "`python -m benchmarks.packed_gain` re-proves the gain; "
+      "`--retune` regenerates the committed schedules.\n")
+    w("| claim | value |")
+    w("|---|---|")
+    w(f"| packed engine vs canonical unpack+matmul (`{gain['config']}`, "
+      f"batch {gain['batch']}) | **{gain['speedup']:.2f}x** "
+      f"(floor {gain['min_speedup']:.2f}x) |")
+    w(f"| bit-exact (both datapaths vs interpreter) | {gain['bit_exact']} |")
+    w(f"| nodes on the packed datapath | {gain['packed_nodes']}"
+      f"/{gain['total_nodes']} "
+      f"({', '.join(gain.get('packed_node_names', []))}) |")
+    w(f"| kernel backends selected | "
+      f"{', '.join(gain.get('packed_backends', []))} |")
+    w(f"| HBM-resident weight bytes, binary-mode NID-MLP | "
+      f"{gain['binary_weight_bytes_packed']} packed vs "
+      f"{gain['binary_weight_bytes_canonical']} canonical = "
+      f"**{gain['weight_bytes_reduction']:.2f}x** "
+      f"(floor {gain['min_weight_bytes_reduction']:.1f}x) |")
+    w("\nThe xnor pallas kernel *is* the packed datapath (both operands "
+      "are uint32 words through the popcount identity "
+      "`dot = 2·popcount(~(a⊕w)) − K`), so its canonical comparator is "
+      "the unpack+matmul XLA path; binary-mode layers gain the storage "
+      "reduction (int8 rows → bitplanes, ≈8x at K=600) with the "
+      "`2·(x·w01) − Σx` identity on the packed words.\n")
 
 
 def section_build_reports(w):
@@ -549,7 +601,8 @@ def section_build_reports(w):
     w("Every accelerator is produced by one "
       "`repro.build.build(graph, target=...)` call running a FINN-style "
       "list of named steps (lower → finalize → fold → fuse_epilogues → "
-      "fuse_swu → tune → dataflow → engine [→ calibrate]), each graph "
+      "fuse_swu → tune → pack_weights → dataflow → engine [→ calibrate]), "
+      "each graph "
       "rewrite verified bit-exact against the reference interpreter on "
       "a probe batch. The BuildReport below is the software analog of "
       "the paper's per-design resource/synthesis tables (field-by-field "
@@ -571,13 +624,21 @@ def section_build_reports(w):
             w(f"| {s['name']} | {s['wall_s']:.3f} | {ver} | {ops} |")
         if rep.get("nodes"):
             w("\n| stage | op | branch | N | K | PE | SIMD | cycles "
-              "| LUT-analog B | BRAM-analog B | tuned |")
-            w("|---|---|---|---|---|---|---|---|---|---|---|")
+              "| LUT-analog B | BRAM-analog B | weights | tuned |")
+            w("|---|---|---|---|---|---|---|---|---|---|---|---|")
             for n in rep["nodes"]:
+                wb, cwb = n.get("weight_bytes", 0), n.get("canonical_weight_bytes", 0)
+                if n.get("packed") and cwb:
+                    wcol = f"{wb} B packed ({cwb / max(wb, 1):.1f}x)"
+                elif wb:
+                    wcol = f"{wb} B"
+                else:
+                    wcol = "—"
                 w(f"| {n['name']} | {n['op']} | {n.get('branch', 'main')} "
                   f"| {n['n']} | {n['k']} "
                   f"| {n['pe']} | {n['simd']} | {n['cycles']} "
                   f"| {n['lut_bytes']} | {n['bram_bytes']} "
+                  f"| {wcol} "
                   f"| {'yes' if n['tuned'] else 'no'} |")
         pred, meas = rep.get("predicted_interval_s"), rep.get("measured_interval_s")
         line = (f"\nSteady-state interval: predicted "
@@ -803,6 +864,7 @@ def main():
     section_explore(w, explore, figs)
     section_figures(w, figs, sweep, hm)
     section_autotune(w)
+    section_packed(w)
     section_build_reports(w)
     section_residual(w)
     section_serving(w)

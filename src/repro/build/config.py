@@ -18,6 +18,11 @@ from repro.core.folding import Folding
 TARGETS = ("interpret", "engine", "pipeline", "serving")
 TUNE_MODES = ("off", "cache", "auto")
 VERIFY_MODES = ("all", "off")
+# weight-packing policies (the pack_weights step):
+#   auto   pack nodes whose tuned schedule selected the packed datapath
+#   never  keep canonical weight storage everywhere
+#   always force packed storage on every packable node (sweeps/benchmarks)
+PACK_MODES = ("auto", "never", "always")
 
 # folding policies (the ``folding`` field also accepts an explicit
 # per-MVU-node list of Folding objects, applied in chain order)
@@ -66,6 +71,10 @@ class BuildConfig:
     tune: autotune policy -- ``"off"``, ``"cache"`` (committed schedules,
         zero measurement) or ``"auto"`` (measure misses).  ``cache`` may
         hold a ScheduleCache; None means ``autotune.default_cache()``.
+    pack: weight-packing policy for the ``pack_weights`` step --
+        ``"auto"`` packs exactly the nodes whose tuned schedule selected
+        the packed datapath, ``"never"`` keeps canonical storage,
+        ``"always"`` forces packed storage on every packable node.
     verify: ``"all"`` re-runs a probe batch through the reference
         interpreter after every graph transform (FINN's verification
         steps) and checks bit-exactness; ``"off"`` skips.
@@ -93,6 +102,8 @@ class BuildConfig:
     tune: str = "off"
     cache: Any = None  # ScheduleCache | None
     tune_kwargs: dict | None = None
+    # weight packing (the pack_weights step)
+    pack: str = "auto"
     # engine
     microbatches: int | None = None
     # serving calibration (target="serving")
@@ -118,6 +129,9 @@ class BuildConfig:
         if self.verify not in VERIFY_MODES:
             raise BuildError(
                 f"verify must be one of {VERIFY_MODES}, got {self.verify!r}")
+        if self.pack not in PACK_MODES:
+            raise BuildError(
+                f"pack must be one of {PACK_MODES}, got {self.pack!r}")
         if isinstance(self.folding, str) and self.folding not in (
                 FOLD_BALANCE, FOLD_NONE):
             raise BuildError(

@@ -60,6 +60,12 @@ class NodeReport:
     # serialized before the DAG IR loadable.
     inputs: list = dataclasses.field(default_factory=list)
     branch: str = "main"
+    # packed-datapath decision + HBM-resident weight bytes as stored vs
+    # the canonical (unpacked) form.  Defaults (0 = unrecorded) keep
+    # reports serialized before the packed datapath loadable.
+    packed: bool = False
+    weight_bytes: int = 0
+    canonical_weight_bytes: int = 0
 
 
 @dataclasses.dataclass

@@ -17,6 +17,7 @@ hand-sequence:
     fuse_epilogues  lowering.fuse_epilogues
     fuse_swu        lowering.fuse_swu
     tune            autotune.tune_graph      (cache hits/misses reported)
+    pack_weights    lowering.pack_weights    (bit-packed weight storage)
     dataflow        dataflow.schedule -> report tables
     engine          core.engine.FusedEngine
     calibrate       serving.calibrate_cycle_time (serving target)
@@ -122,9 +123,10 @@ def resolve_step(step) -> Callable[[BuildState], Any]:
 # targets fuse + tune + compile; ``serving`` additionally measures the
 # realized cycle time so batcher flush budgets are in wall-clock units.
 _ENGINE_STEPS = ("validate", "lower", "finalize", "fold", "fuse_epilogues",
-                 "fuse_swu", "tune", "dataflow", "engine")
+                 "fuse_swu", "tune", "pack_weights", "dataflow", "engine")
 DEFAULT_STEPS: dict[str, tuple[str, ...]] = {
-    "interpret": ("validate", "lower", "finalize", "fold", "dataflow"),
+    "interpret": ("validate", "lower", "finalize", "fold", "pack_weights",
+                  "dataflow"),
     "engine": _ENGINE_STEPS,
     "pipeline": _ENGINE_STEPS,
     "serving": _ENGINE_STEPS + ("calibrate",),
@@ -224,9 +226,27 @@ def step_tune(state: BuildState) -> None:
     hits = sum(1 for key in keys if key in state.cache)
     misses = len(keys) - hits
     state.graph = autotune.tune_graph(
-        state.graph, cache=state.cache, mode=cfg.tune, **kwargs)
+        state.graph, cache=state.cache, mode=cfg.tune,
+        allow_packed=cfg.pack != "never", **kwargs)
     state.report.tune.update(
         cache_hits=hits, cache_misses=misses, cache_entries=len(state.cache))
+    state.mark_dirty()
+
+
+@register_step("pack_weights")
+def step_pack_weights(state: BuildState) -> None:
+    """Bit-packed weight storage rewrite (``lowering.pack_weights``).
+
+    ``pack="auto"`` packs exactly the nodes whose tuned schedule selected
+    the packed datapath; ``"always"`` forces every packable node;
+    ``"never"`` is a no-op.  The per-step verification hook then proves
+    the rewrite bit-exact against the pinned reference for free.
+    """
+    cfg = state.cfg
+    if cfg.pack == "never":
+        return
+    state.graph = lowering.pack_weights(
+        state.graph, force=cfg.pack == "always")
     state.mark_dirty()
 
 
@@ -253,7 +273,10 @@ def step_dataflow(state: BuildState) -> None:
             bram_bytes=res.bram_bytes, backend=mcfg.backend,
             tuned=mcfg.blocks is not None,
             inputs=list(node.inputs),
-            branch=branches.get(node.name, "main")))
+            branch=branches.get(node.name, "main"),
+            packed=mcfg.packed,
+            weight_bytes=res.weight_bytes,
+            canonical_weight_bytes=res.canonical_weight_bytes))
     state.report.nodes = nodes
     if sched.stages:
         state.report.predicted_interval_s = (

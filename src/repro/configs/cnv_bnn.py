@@ -77,15 +77,19 @@ TUNED_SCHEDULES = {
         "epilogue": "thresh", "n_pixels": 4,
         "predicted_cycles": 8, "speedup": 1.0,
     },
+    # dense xnor stages run the natively bit-packed Pallas XNOR/popcount
+    # kernel -- ``"packed": True`` records the datapath the winner ran on
+    # (keys are shape-scoped, so the n64|k64 entry is shared with the
+    # binarized NID-MLP variant and must stay identical in both configs)
     "cpu|mvu|xnor|n64|k64|thresh|px1": {
-        "backend": "pallas", "block_m": 32, "block_n": 64, "block_k": 128,
+        "backend": "pallas", "block_m": 256, "block_n": 64, "block_k": 128,
         "block_kw": 2, "epilogue": "thresh", "n_pixels": 1,
-        "predicted_cycles": 1, "speedup": 1.42,
+        "packed": True, "predicted_cycles": 1, "speedup": 1.45,
     },
     "cpu|mvu|xnor|n10|k64|scale|px1": {
         "backend": "pallas", "block_m": 256, "block_n": 128, "block_k": 128,
         "block_kw": 2, "epilogue": "scale", "n_pixels": 1,
-        "predicted_cycles": 1, "speedup": 1.13,
+        "packed": True, "predicted_cycles": 1, "speedup": 1.13,
     },
     "engine|cpu|8ea0ac6c37bc": {
         "microbatch": 1, "batch": 128, "speedup": 1.0,

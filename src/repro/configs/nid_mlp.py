@@ -75,4 +75,26 @@ TUNED_SCHEDULES = {
     "engine|cpu|b155d7a42584": {
         "microbatch": 256, "batch": 1024, "speedup": 1.0,
     },
+    # Binarized (mode="xnor") variant of the same chain: the empirical
+    # search picks the bit-packed XNOR/popcount datapath (``"packed":
+    # True``) on every layer -- the blocked-popcount XLA path on the wide
+    # layers, the natively-packed Pallas kernel on the square ones.  The
+    # canonical unpack+matmul schedule loses 5-30x on this host.
+    # Regenerate with ``python -m benchmarks.packed_gain --retune``.
+    "cpu|mvu|xnor|n64|k600|thresh|px1": {
+        "backend": "xla", "block_m": 128, "block_n": 64, "block_k": 128,
+        "block_kw": 3, "epilogue": "thresh", "n_pixels": 1,
+        "packed": True, "predicted_cycles": 5, "speedup": 2.57,
+    },
+    # shared shape with cnv_bnn's fc1 (same key): keep both copies identical
+    "cpu|mvu|xnor|n64|k64|thresh|px1": {
+        "backend": "pallas", "block_m": 256, "block_n": 64, "block_k": 128,
+        "block_kw": 2, "epilogue": "thresh", "n_pixels": 1,
+        "packed": True, "predicted_cycles": 1, "speedup": 1.45,
+    },
+    "cpu|mvu|xnor|n1|k64|scale|px1": {
+        "backend": "xla", "block_m": 128, "block_n": 8, "block_k": 128,
+        "block_kw": 1, "epilogue": "scale", "n_pixels": 1,
+        "packed": True, "predicted_cycles": 4, "speedup": 2.19,
+    },
 }

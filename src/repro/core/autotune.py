@@ -98,10 +98,15 @@ def node_key(cfg: MVUConfig, *, epilogue: str = "raw", n_pixels: int = 1,
     # None = the live host; "" is a valid (device-less) scope used by
     # engine_key's digest parts and must NOT fall back to device_kind()
     device = device_kind() if device is None else device
-    return "|".join([
+    key = "|".join([
         device, op, cfg.mode, f"n{cfg.out_features}", f"k{cfg.in_features}",
         epilogue, f"px{n_pixels}",
     ])
+    # packed-datapath configs get their own key space: a schedule tuned for
+    # bit-packed weight storage must never alias the canonical one.  The
+    # suffix is appended only when packed, so every committed (unpacked)
+    # cache entry and engine digest stays valid.
+    return key + "|packed" if cfg.packed else key
 
 
 def graph_node_keys(graph: Graph, *, device: str | None = None) -> list[str]:
@@ -239,20 +244,48 @@ class Candidate:
     blocks: KernelBlocks
     predicted_cycles: int
     vmem_bytes: int
+    packed: bool = False  # bit-packed weight storage + packed kernel family
 
     def entry(self, **extra) -> dict:
-        return {
+        out = {
             "backend": self.backend,
             **dataclasses.asdict(self.blocks),
             "predicted_cycles": int(self.predicted_cycles),
             **extra,
         }
+        if self.packed:  # legacy (unpacked) entries stay byte-identical
+            out["packed"] = True
+        return out
 
 
-def _blocks_folding(blocks: KernelBlocks, mode: str) -> Folding:
+def _blocks_folding(blocks: KernelBlocks, mode: str,
+                    packed: bool = False) -> Folding:
     """The folding a block schedule *acts* as (PE=block_n, SIMD=K step)."""
-    simd = blocks.block_kw * WORD_BITS if mode == "xnor" else blocks.block_k
+    if mode == "xnor" or (packed and mode == "binary"):
+        simd = blocks.block_kw * WORD_BITS
+    else:
+        simd = blocks.block_k
     return Folding(blocks.block_n, simd)
+
+
+def packable(cfg: MVUConfig) -> bool:
+    """Whether the packed datapath exists for this config's weight coding.
+
+    All 1-bit codings pack into uint32 bitplanes; standard weights pack
+    into 2-bit lanes only when they actually fit signed 2 bits.
+    """
+    return cfg.mode in ("xnor", "binary") or cfg.weight_bits <= 2
+
+
+def natively_packed(cfg: MVUConfig, backend: str) -> bool:
+    """Whether this (coding, backend) kernel already IS the packed datapath.
+
+    The xnor Pallas kernel consumes packed uint32 words for both operands
+    (the paper's Fig. 4a XNOR/popcount array) -- its candidates carry
+    ``packed=True`` so the tuned entry records the datapath that actually
+    ran, and the canonical comparator stays the unpack+matmul XLA path.
+    """
+    return cfg.mode == "xnor" and backend == "pallas"
 
 
 def enumerate_candidates(
@@ -295,15 +328,24 @@ def enumerate_candidates(
                 cyc = Folding(bn, k).cycles(n, k, n_pixels)
                 cands.append(Candidate("pallas", blocks, cyc, vm))
     else:
-        for blk in block_candidates(n, k, cfg.mode):
-            blocks = KernelBlocks.from_blocks(blk)
-            fold = _blocks_folding(blocks, cfg.mode)
-            res = mvu_resources(
-                n, k, fold, mode=cfg.mode, weight_bits=cfg.weight_bits,
-                act_bits=cfg.act_bits, n_pixels=n_pixels,
-                block_m=blocks.block_m, n_thresh=n_thresh,
-                blocks=blocks.as_kwargs(cfg.mode))
-            cands.append(Candidate("pallas", blocks, res.cycles, res.lut_bytes))
+        # joint folding x packing space: each legal tile schedule exists
+        # once per weight-storage form the coding supports (the xnor Pallas
+        # kernel is natively packed, so its packed variant would duplicate)
+        packed_axes = [False]
+        if packable(cfg) and cfg.mode != "xnor":
+            packed_axes.append(True)
+        for pk in packed_axes:
+            for blk in block_candidates(n, k, cfg.mode, packed=pk):
+                blocks = KernelBlocks.from_blocks(blk)
+                fold = _blocks_folding(blocks, cfg.mode, pk)
+                res = mvu_resources(
+                    n, k, fold, mode=cfg.mode, weight_bits=cfg.weight_bits,
+                    act_bits=cfg.act_bits, n_pixels=n_pixels,
+                    block_m=blocks.block_m, n_thresh=n_thresh,
+                    blocks=blocks.as_kwargs(cfg.mode, pk), packed=pk)
+                cands.append(Candidate(
+                    "pallas", blocks, res.cycles, res.lut_bytes,
+                    packed=pk or natively_packed(cfg, "pallas")))
 
     survivors = [c for c in cands if c.vmem_bytes <= vmem_bytes]
     survivors.sort(key=lambda c: (c.predicted_cycles, c.vmem_bytes))
@@ -313,11 +355,18 @@ def enumerate_candidates(
         {**{"block_m": cfg.block_m}, **cfg.kernel_blocks()})
     heur_cycles = cfg.resolved_folding().cycles(n, k, n_pixels)
     if not any(c.blocks == heur for c in survivors):
-        survivors.append(Candidate("pallas", heur, heur_cycles, 0))
+        survivors.append(Candidate("pallas", heur, heur_cycles, 0,
+                                   packed=natively_packed(cfg, "pallas")))
     # the XLA backend is one more point in the design space: on hosts where
     # the compiler's schedule beats interpret-mode Pallas (every CPU), the
     # empirical search must be allowed to find that out.
     survivors.append(Candidate("xla", heur, heur_cycles, 0))
+    if conv is None and packable(cfg):
+        # ... and so is the packed datapath compiled by XLA (the blocked
+        # XNOR popcount path in particular is the memory-bandwidth-bound
+        # fast path on large N*K layers) -- always in the measured set so
+        # the packed-vs-unpacked decision is empirical, never assumed.
+        survivors.append(Candidate("xla", heur, heur_cycles, 0, packed=True))
     return survivors
 
 
@@ -376,7 +425,7 @@ def _synth_activations(cfg: MVUConfig, m: int, in_shape: tuple | None,
 
 
 def _node_fn(cfg: MVUConfig, params, cand: Candidate, conv: dict | None):
-    blocks = cand.blocks.as_kwargs(cfg.mode)
+    blocks = cand.blocks.as_kwargs(cfg.mode, cand.packed)
     if conv is not None:
         def fn(x):
             return ops.conv_mvu(
@@ -385,6 +434,22 @@ def _node_fn(cfg: MVUConfig, params, cand: Candidate, conv: dict | None):
                 k_bits=cfg.in_features if cfg.mode == "xnor" else None,
                 thresholds=params.thresholds, out_scale=params.out_scale,
                 backend=cand.backend, **blocks)
+        return fn
+
+    if cand.packed:
+        # pack once outside the timed fn -- at run time the packed storage
+        # is what lives in HBM (the pack_weights build rewrite).  Configs
+        # already rewritten by that step carry packed weights as-is.
+        from repro.kernels.mvu_packed import pack_mvu_weights
+
+        w_packed = (params.weights if cfg.packed
+                    else pack_mvu_weights(params.weights, cfg.mode))
+
+        def fn(x):
+            return ops.mvu(
+                x, w_packed, cfg.mode, k_bits=cfg.in_features,
+                thresholds=params.thresholds, out_scale=params.out_scale,
+                backend=cand.backend, packed=True, **blocks)
         return fn
 
     def fn(x):
@@ -407,6 +472,7 @@ def tune_node(
     margin: float = 0.05,
     timer=None,
     seed: int = 0,
+    allow_packed: bool = True,
 ) -> dict:
     """Measure the pruned shortlist for one finalized mvu/conv_mvu node.
 
@@ -436,7 +502,8 @@ def tune_node(
         {**{"block_m": cfg.block_m}, **cfg.kernel_blocks()})
     base_cycles = cfg.resolved_folding().cycles(
         cfg.out_features, cfg.in_features, n_pixels)
-    base = Candidate(cfg.backend, base_blocks, base_cycles, 0)
+    base = Candidate(cfg.backend, base_blocks, base_cycles, 0,
+                     packed=cfg.packed or natively_packed(cfg, cfg.backend))
     base_fn = _node_fn(cfg, params, base, conv)
     want = np.asarray(base_fn(x))
 
@@ -452,14 +519,20 @@ def tune_node(
             rt = c.blocks.rows_per_tile or conv_rows_per_tile(
                 oh, ow, c.blocks.block_m)
             return (c.backend, c.blocks.block_n, rt)
-        kw = c.blocks.as_kwargs(cfg.mode)
+        kw = c.blocks.as_kwargs(cfg.mode, c.packed)
         kw.pop("rows_per_tile", None)
-        return (c.backend, tuple(sorted(kw.items())))
+        # packed xnor runs the same Pallas kernel but a different XLA path,
+        # so the storage axis is part of the effective identity throughout
+        return (c.backend, c.packed, tuple(sorted(kw.items())))
 
     best, best_speed = base, 1.0
     measured = 0
     seen_eff = {effective(base)}
     for cand in cands:
+        if cfg.packed and not cand.packed:
+            continue  # packed storage cannot feed the canonical kernels
+        if cand.packed and not allow_packed and cfg.mode != "xnor":
+            continue  # pack="never": storage rewrite is policy-excluded
         if effective(cand) in seen_eff:
             continue
         seen_eff.add(effective(cand))
@@ -479,11 +552,17 @@ def tune_node(
 
 
 def apply_entry(cfg: MVUConfig, entry: dict) -> MVUConfig:
-    """Pin a cache entry's schedule onto an MVUConfig."""
+    """Pin a cache entry's schedule onto an MVUConfig.
+
+    An entry carrying ``"packed": true`` selects the bit-packed datapath;
+    the weight storage itself is rewritten later by the ``pack_weights``
+    build step (``repro.core.lowering.pack_weights``).
+    """
     blocks = KernelBlocks.from_blocks(entry)
     return MVUConfig(**{
         **cfg.__dict__,
         "backend": entry.get("backend", cfg.backend),
+        "packed": bool(entry.get("packed", cfg.packed)),
         "blocks": blocks,
         "block_m": blocks.block_m,
     })
@@ -497,6 +576,7 @@ def tune_graph(
     device: str | None = None,
     timer=None,
     vmem_bytes: int = VMEM_BYTES,
+    allow_packed: bool = True,
     **tune_kwargs,
 ) -> Graph:
     """Annotate every finalized mvu/conv_mvu node with its tuned schedule.
@@ -518,13 +598,28 @@ def tune_graph(
             continue
         in_shape = ins[0] if ins else None
         cfg: MVUConfig = node.attrs["config"]
+        if cfg.packed and cfg.blocks is not None:
+            # the node already carries a tuned packed schedule (a prior
+            # pass ran apply_entry); looking it up again under the
+            # ``|packed``-suffixed key would re-measure on every
+            # downstream pass and duplicate the entry in the cache
+            out.append(node)
+            continue
         key = node_key(cfg, epilogue=epilogue_form(node.params["mvu"]),
                        n_pixels=ir.n_pixels(out_shape), device=device,
                        op=op_tag(node, in_shape))
         entry = cache.get(key)
-        if entry is None and mode == "auto":
+        if (entry is not None and entry.get("packed")
+                and not allow_packed and cfg.mode != "xnor"):
+            # pack="never" policy: a cached packed-datapath winner would
+            # need the storage rewrite the build config forbids, so the
+            # node keeps its heuristic schedule (xnor storage is packed
+            # words either way -- its entries apply under any policy)
+            entry = None
+        elif entry is None and mode == "auto":
             entry = tune_node(node, in_shape, timer=timer,
-                              vmem_bytes=vmem_bytes, **tune_kwargs)
+                              vmem_bytes=vmem_bytes,
+                              allow_packed=allow_packed, **tune_kwargs)
             cache.put(key, entry)
         if entry is None:
             out.append(node)

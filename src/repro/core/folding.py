@@ -122,18 +122,25 @@ def balance_pipeline(
     ]
 
 
-def to_tpu_blocks(fold: Folding, mode: str, m: int = 128) -> dict[str, int]:
+def to_tpu_blocks(fold: Folding, mode: str, m: int = 128, *,
+                  packed: bool = False) -> dict[str, int]:
     """Map (PE, SIMD) onto Pallas block shapes.
 
     block_n = PE (output rows in parallel), block_k = SIMD synapses per grid
     step; the XNOR datapath packs 32 synapses per word so block_kw =
-    SIMD / 32.  Values are clamped up to TPU-friendly minima (8 sublanes /
-    128 lanes) -- small FPGA-style arrays are legal but pad on real silicon.
+    SIMD / 32, and the packed binary datapath steps the same word axis.
+    Packed 2-bit weights carry 4 lanes per byte, so block_k rounds up to a
+    whole number of bytes.  Values are clamped up to TPU-friendly minima
+    (8 sublanes / 128 lanes) -- small FPGA-style arrays are legal but pad
+    on real silicon.
     """
-    if mode == "xnor":
+    if mode == "xnor" or (packed and mode == "binary"):
         bkw = max(1, fold.simd // WORD_BITS)
         return {"block_m": m, "block_n": max(8, fold.pe), "block_kw": bkw}
-    return {"block_m": m, "block_n": max(8, fold.pe), "block_k": max(8, fold.simd)}
+    bk = max(8, fold.simd)
+    if packed:  # 2-bit lane storage: whole bytes per K step
+        bk = -(-bk // 4) * 4
+    return {"block_m": m, "block_n": max(8, fold.pe), "block_k": bk}
 
 
 def block_candidates(
@@ -143,20 +150,23 @@ def block_candidates(
     *,
     block_ms: Sequence[int] = (32, 128, 256),
     max_block: int = 512,
+    packed: bool = False,
 ) -> list[dict[str, int]]:
     """Enumerate the legal Pallas tile schedules for an (N, K) layer.
 
     The candidate axes come from the layer's folding divisors, clamped to
     the TPU minima exactly like :func:`to_tpu_blocks` (block_n/block_k >= 8),
     plus the full-MXU defaults -- so the heuristic schedule is always in the
-    set and the autotuner can only match or beat it.  ``block_kw`` (xnor)
-    ranges over divisors of the packed word count.  Candidates are unique
-    dicts; ordering/pruning is the caller's job (``repro.core.autotune``).
+    set and the autotuner can only match or beat it.  ``block_kw`` (xnor and
+    the packed binary datapath) ranges over divisors of the packed word
+    count; packed 2-bit block_k is held to whole bytes.  Candidates are
+    unique dicts; ordering/pruning is the caller's job
+    (``repro.core.autotune``).
     """
     bns = sorted({max(8, d) for d in divisors(n)} | {128})
     bns = [b for b in bns if b <= max(max_block, 8)]
     out: list[dict[str, int]] = []
-    if mode == "xnor":
+    if mode == "xnor" or (packed and mode == "binary"):
         n_words = -(-k // WORD_BITS)
         bkws = sorted({d for d in divisors(n_words)} | {min(8, n_words)})
         for bm in block_ms:
@@ -166,6 +176,8 @@ def block_candidates(
     else:
         bks = sorted({max(8, d) for d in divisors(k)} | {128, min(512, max(8, k))})
         bks = [b for b in bks if b <= max(max_block, 8)]
+        if packed:  # 2-bit lane storage: whole bytes per K step
+            bks = sorted({-(-b // 4) * 4 for b in bks})
         for bm in block_ms:
             for bn in bns:
                 for bk in bks:

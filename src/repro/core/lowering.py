@@ -7,6 +7,8 @@
     apply_folding:  attach rate-balanced Folding to every mvu/conv_mvu node
     apply_schedules: pin empirically tuned kernel schedules from the
                      autotune cache onto every mvu/conv_mvu node
+    pack_weights:   rewrite packed-datapath nodes' weight storage into the
+                    bit-packed form (uint32 bitplanes / uint8 2-bit lanes)
 
 All passes are DAG-aware: patterns match along explicit dataflow edges
 (producer -> sole-consumer paths), not list adjacency, so chains and
@@ -336,3 +338,48 @@ def apply_schedules(graph: Graph, *, cache=None, mode: str = "cache",
     from repro.core import autotune
 
     return autotune.tune_graph(graph, cache=cache, mode=mode, device=device)
+
+
+def pack_weights(graph: Graph, *, force: bool = False) -> Graph:
+    """Packing rewrite: store MVU weights in their bit-packed form.
+
+    Rewrites every finalized dense ``mvu`` node whose config selects the
+    packed datapath (``cfg.packed`` -- normally pinned by a tuned schedule
+    entry carrying ``"packed": true``), or every packable one when
+    ``force`` is set (the build's ``pack="always"`` policy).  Storage
+    converts per coding: binary {0,1} int8 rows -> uint32 bitplanes (8x
+    smaller), standard signed 2-bit rows -> uint8 lanes (4x), xnor rows
+    are already uint32 words (storage no-op; the flag still routes the XLA
+    backend onto the blocked-popcount path).  Conv nodes keep canonical
+    storage -- the fused line-buffer gather consumes unpacked rows.
+    Returns a new graph; rewritten nodes carry fresh params/attrs.
+    """
+    from repro.core.autotune import packable
+    from repro.core.mvu import MVUParams
+    from repro.kernels.mvu_packed import pack_mvu_weights
+
+    out = Graph()
+    for node in graph:
+        if node.op != "mvu" or "mvu" not in node.params:
+            out.append(node)
+            continue
+        cfg: MVUConfig = node.attrs["config"]
+        if not (cfg.packed or (force and packable(cfg))):
+            out.append(node)
+            continue
+        params = node.params["mvu"]
+        w = params.weights
+        # idempotence: canonical non-xnor storage is int8 rows; packed
+        # forms are uint32 words / uint8 lanes, so dtype tells us whether
+        # the rewrite already ran
+        if cfg.mode != "xnor" and w.dtype == jnp.int8:
+            w = pack_mvu_weights(w, cfg.mode)
+        new_params = MVUParams(weights=w, thresholds=params.thresholds,
+                               out_scale=params.out_scale)
+        new_cfg = (cfg if cfg.packed
+                   else MVUConfig(**{**cfg.__dict__, "packed": True}))
+        out.append(Node(node.op, node.name,
+                        {**node.attrs, "config": new_cfg},
+                        {**node.params, "mvu": new_params},
+                        inputs=node.inputs))
+    return out

@@ -43,11 +43,12 @@ class KernelBlocks:
     block_kw: int = 8  # packed-word K step (xnor datapath only)
     rows_per_tile: int | None = None  # conv line-buffer rows per grid step
 
-    def as_kwargs(self, mode: str) -> dict[str, int]:
+    def as_kwargs(self, mode: str, packed: bool = False) -> dict[str, int]:
         """The kwargs the kernel entry points take (uniform plumbing: the
         dense path ignores ``rows_per_tile``, the conv path ignores the K
-        blocks -- both accept the full set)."""
-        if mode == "xnor":
+        blocks -- both accept the full set).  The packed binary datapath
+        steps K in 32-bit words like xnor, so it takes ``block_kw``."""
+        if mode == "xnor" or (packed and mode == "binary"):
             out = {"block_m": self.block_m, "block_n": self.block_n,
                    "block_kw": self.block_kw}
         else:
@@ -73,6 +74,7 @@ class MVUConfig:
     act_bits: int = 4  # output activation precision when thresholds are used
     folding: Folding | None = None  # None = fully parallel tile defaults
     backend: str = "pallas"
+    packed: bool = False  # bit-packed weight storage + packed datapath
     block_m: int = 128
     blocks: KernelBlocks | None = None  # explicit (tuned) schedule wins
 
@@ -87,8 +89,9 @@ class MVUConfig:
 
     def kernel_blocks(self) -> dict[str, int]:
         if self.blocks is not None:
-            return self.blocks.as_kwargs(self.mode)
-        return to_tpu_blocks(self.resolved_folding(), self.mode, self.block_m)
+            return self.blocks.as_kwargs(self.mode, self.packed)
+        return to_tpu_blocks(self.resolved_folding(), self.mode, self.block_m,
+                             packed=self.packed)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -124,6 +127,10 @@ class MVULayer:
         else:
             lo, hi = int_bounds(cfg.weight_bits, signed=True)
             w = jax.random.randint(key, (n, k), lo, hi + 1, jnp.int8)
+        if cfg.packed:
+            from repro.kernels.mvu_packed import pack_mvu_weights
+
+            w = pack_mvu_weights(w, cfg.mode)
         return MVUParams(weights=w, thresholds=None, out_scale=None)
 
     @staticmethod
@@ -140,6 +147,10 @@ class MVULayer:
             w = packing.bipolar_to_bits(qt.values).astype(jnp.int8)
         else:
             w = qt.values
+        if config.packed:
+            from repro.kernels.mvu_packed import pack_mvu_weights
+
+            w = pack_mvu_weights(w, config.mode)
         t = None if thresholds is None else integerize_thresholds(thresholds)
         scale = None if t is not None else qt.scale.reshape(-1).astype(jnp.float32)
         return MVUParams(weights=w, thresholds=t, out_scale=scale), qt
@@ -147,16 +158,27 @@ class MVULayer:
     def __call__(self, params: MVUParams, x: jax.Array) -> jax.Array:
         """x: (..., K) ints (standard/binary) or (..., Wd) packed (xnor)."""
         cfg = self.config
+        w = params.weights
+        if cfg.packed and cfg.mode != "xnor" and w.dtype == jnp.int8:
+            # packed datapath selected but storage not yet rewritten --
+            # the window between the tune step (apply_entry flips the
+            # flag) and the pack_weights step (rewrites storage).  Pack on
+            # the fly so the graph stays runnable/verifiable throughout.
+            from repro.kernels.mvu_packed import pack_mvu_weights
+
+            w = pack_mvu_weights(w, cfg.mode)
         lead = x.shape[:-1]
         xm = x.reshape(-1, x.shape[-1])
         out = ops.mvu(
             xm,
-            params.weights,
+            w,
             cfg.mode,
-            k_bits=cfg.in_features if cfg.mode == "xnor" else None,
+            k_bits=(cfg.in_features
+                    if cfg.mode == "xnor" or cfg.packed else None),
             thresholds=params.thresholds,
             out_scale=params.out_scale,
             backend=cfg.backend,
+            packed=cfg.packed,
             **self.config.kernel_blocks(),
         )
         return out.reshape(*lead, cfg.out_features)
@@ -175,6 +197,7 @@ class MVULayer:
             block_m=cfg.block_m,
             n_thresh=t,
             blocks=cfg.kernel_blocks(),  # tuned schedules model what they run
+            packed=cfg.packed,
         )
 
 

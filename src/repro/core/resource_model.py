@@ -28,7 +28,7 @@ from repro.core.folding import (
     to_tpu_blocks,
     weight_mem_depth,
 )
-from repro.kernels.packing import WORD_BITS
+from repro.kernels.packing import WORD_BITS, num_int2_bytes, num_words
 
 # TPU v5e hardware constants (roofline terms use the same numbers).
 PEAK_BF16_FLOPS = 197e12
@@ -55,9 +55,26 @@ class MVUResources:
     cycles: int
     macs: int
     ns_per_inference: float
+    weight_bytes: int = 0  # HBM-resident weight bytes as stored
+    canonical_weight_bytes: int = 0  # same weights without packing
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
+
+
+def weight_resident_bytes(n: int, k: int, mode: str, packed: bool) -> int:
+    """HBM-resident bytes of one (N, K) weight matrix as actually stored.
+
+    Canonical storage is int8 rows for binary/standard; the xnor coding is
+    always bit-packed (its canonical form IS uint32 words).  Packed binary
+    stores uint32 bitplanes (8x smaller than int8 rows); packed standard
+    stores 4x 2-bit lanes per byte.
+    """
+    if mode == "xnor" or (packed and mode == "binary"):
+        return n * num_words(k) * 4
+    if packed:
+        return n * num_int2_bytes(k)
+    return n * k  # canonical int8 rows
 
 
 def mvu_resources(
@@ -72,6 +89,7 @@ def mvu_resources(
     block_m: int = 128,
     n_thresh: int = 0,
     blocks: dict | None = None,
+    packed: bool = False,
 ) -> MVUResources:
     """Closed-form resource estimate for one MVU layer instance.
 
@@ -81,12 +99,15 @@ def mvu_resources(
     pads K up to a whole number of ``block_k`` steps while keeping the A
     tile full-K resident in int8.  Pass ``blocks`` to estimate an explicit
     (e.g. autotuned) schedule; otherwise the folding's derived blocks are
-    used.  BRAM/cycle terms stay on the folding abstraction (paper Eq. 1/2).
+    used.  ``packed`` models the bit-packed datapath: the weight tile (and
+    the HBM-resident ``weight_bytes``) shrink by the packing factor while
+    the A tile widens to the padded word span.  BRAM/cycle terms stay on
+    the folding abstraction (paper Eq. 1/2).
     """
     wb = weight_bits / 8.0
     ab = _act_bytes(mode, act_bits)
     if blocks is None:
-        blocks = to_tpu_blocks(fold, mode, block_m)
+        blocks = to_tpu_blocks(fold, mode, block_m, packed=packed)
     block_m = blocks.get("block_m", block_m)
     bn = blocks["block_n"]
 
@@ -96,12 +117,19 @@ def mvu_resources(
         kw = -(-k // WORD_BITS)
         a_tile = block_m * (-(-kw // bkw) * bkw) * 4  # packed input, full K
         w_tile = bn * bkw * 4
+    elif packed and mode == "binary":
+        # bitplane weights stepped in words; A int8 over the padded span
+        bkw = blocks.get("block_kw", max(1, fold.simd // WORD_BITS))
+        kw = num_words(k)
+        a_tile = block_m * (-(-kw // bkw) * bkw) * WORD_BITS * 1
+        w_tile = bn * bkw * 4
     else:
         # int8 operands on the MXU path regardless of logical weight_bits;
         # A is full-K resident, padded up to whole block_k steps
         bk = blocks.get("block_k", max(8, fold.simd))
         a_tile = block_m * (-(-k // bk) * bk) * 1
-        w_tile = bn * bk * 1
+        # packed standard: the weight tile is 2-bit lanes, 4 per byte
+        w_tile = bn * (bk // 4 if packed else bk) * 1
     acc = block_m * bn * 4  # int32 PE accumulators
     thr = bn * n_thresh * 4
     out_tile = block_m * bn * 4
@@ -124,6 +152,8 @@ def mvu_resources(
         cycles=cycles,
         macs=macs,
         ns_per_inference=ns,
+        weight_bytes=weight_resident_bytes(n, k, mode, packed),
+        canonical_weight_bytes=weight_resident_bytes(n, k, mode, False),
     )
 
 

@@ -39,12 +39,19 @@ class LayerShape:
 
 @dataclasses.dataclass(frozen=True)
 class SweepPoint:
-    """One design point: grid coordinates + the realized per-stage foldings."""
+    """One design point: grid coordinates + the realized per-stage foldings.
+
+    ``packed`` is the weight-storage coordinate of the joint folding x
+    packing space: True builds the point with ``pack="always"`` (bit-packed
+    weights + packed datapath on every packable stage), False with
+    ``pack="never"`` (canonical storage).
+    """
 
     point_id: str
     pe_target: int
     simd_target: int
     foldings: tuple[Folding, ...]
+    packed: bool = False
 
     def as_dict(self) -> dict:
         return {
@@ -52,6 +59,7 @@ class SweepPoint:
             "pe_target": self.pe_target,
             "simd_target": self.simd_target,
             "foldings": [[f.pe, f.simd] for f in self.foldings],
+            "packed": self.packed,
         }
 
 
@@ -86,13 +94,17 @@ def sweep_grid(
     shapes: list[LayerShape],
     pe_targets: tuple[int, ...] | None = None,
     simd_targets: tuple[int, ...] | None = None,
+    packings: tuple[bool, ...] = (False,),
 ) -> list[SweepPoint]:
     """The deduplicated design grid for one workload.
 
     Every (pe_target, simd_target) pair becomes a point whose per-stage
     foldings are the targets clamped to each layer's divisors; pairs that
     realize identical folding lists are merged (the first grid coordinate
-    wins, so point ids stay stable as axes grow).
+    wins, so point ids stay stable as axes grow).  ``packings`` crosses the
+    weight-storage axis into the grid: each realized folding appears once
+    per packing, so ``(False, True)`` sweeps the joint folding x packing
+    space (packed point ids carry a ``_packed`` suffix).
     """
     if not shapes:
         raise ValueError("sweep_grid needs at least one MVU layer shape")
@@ -106,10 +118,13 @@ def sweep_grid(
         for simd_t in simd_targets:
             folds = tuple(clamp_folding(s.n, s.k, pe_t, simd_t)
                           for s in shapes)
-            key = tuple((f.pe, f.simd) for f in folds)
-            if key in seen:
-                continue
-            seen.add(key)
-            points.append(SweepPoint(f"pe{pe_t}_simd{simd_t}",
-                                     int(pe_t), int(simd_t), folds))
+            for packed in packings:
+                key = (tuple((f.pe, f.simd) for f in folds), bool(packed))
+                if key in seen:
+                    continue
+                seen.add(key)
+                suffix = "_packed" if packed else ""
+                points.append(SweepPoint(f"pe{pe_t}_simd{simd_t}{suffix}",
+                                         int(pe_t), int(simd_t), folds,
+                                         packed=bool(packed)))
     return points

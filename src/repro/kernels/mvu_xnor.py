@@ -32,10 +32,10 @@ from repro.kernels._common import (
     std_grid,
     swar_popcount,
 )
-from repro.kernels.packing import WORD_BITS
+from repro.kernels.packing import WORD_BITS, pad_correction
 
 
-def _kernel(*refs, block_kw: int, k_bits: int, kp_bits: int,
+def _kernel(*refs, block_kw: int, correction: int,
             has_thresh: bool, has_scale: bool):
     if has_thresh:
         a_ref, w_ref, t_ref, o_ref, acc_ref = refs
@@ -62,8 +62,8 @@ def _kernel(*refs, block_kw: int, k_bits: int, kp_bits: int,
 
     @pl.when(k == nk - 1)
     def _done():
-        # bipolar dot over the true K bits (pad bits each added one count)
-        dot = 2 * acc_ref[...] - (kp_bits + (kp_bits - k_bits))
+        # bipolar dot over the true K bits (packing.pad_correction)
+        dot = 2 * acc_ref[...] - correction
         epilogue_write(o_ref, dot, t_ref, s_ref)
 
 
@@ -122,8 +122,7 @@ def mvu_xnor_pallas(
         functools.partial(
             _kernel,
             block_kw=block_kw,
-            k_bits=k_bits,
-            kp_bits=kp_bits,
+            correction=pad_correction(k_bits, kp_bits),
             has_thresh=has_thresh,
             has_scale=has_scale,
         ),

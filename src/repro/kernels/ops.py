@@ -19,6 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import mvu_packed as packed_kernels
 from repro.kernels import packing, ref
 from repro.kernels._common import default_interpret
 from repro.kernels.mvu_binary import mvu_binary_pallas
@@ -135,6 +136,7 @@ def mvu(
     thresholds: jax.Array | None = None,
     out_scale: jax.Array | None = None,
     backend: str = "pallas",
+    packed: bool = False,
     block_m: int = 128,
     block_n: int = 128,
     block_k: int = 128,
@@ -146,6 +148,11 @@ def mvu(
 
     Shapes: standard/binary: a (M, K), w (N, K). xnor: packed a (M, Wd)
     uint32, w (N, Wd) uint32 with ``k_bits`` true synapses.
+
+    ``packed=True`` selects the bit-packed datapath (kernels/mvu_packed.py):
+    ``w`` is then the mode's packed storage form -- uint32 bitplanes for
+    binary, uint8 2-bit lanes for standard, the usual packed words for xnor
+    -- and ``k_bits`` carries the true K for every mode.
 
     ``rows_per_tile`` is accepted for uniform block plumbing with
     :func:`conv_mvu` (tuned schedules pass one kwargs set to either entry
@@ -159,6 +166,14 @@ def mvu(
         raise ValueError(f"backend must be one of {BACKENDS}, got {backend!r}")
     if interpret is None:
         interpret = default_interpret()
+
+    if packed:
+        assert k_bits is not None, "packed mvu requires k_bits"
+        return packed_kernels.mvu_packed(
+            a, w, mode, k_bits, thresholds, out_scale,
+            backend=backend, block_m=block_m, block_n=block_n,
+            block_k=block_k, block_kw=block_kw, interpret=interpret,
+        )
 
     if backend == "xla":
         if mode == "xnor":

@@ -10,9 +10,16 @@ Bipolar convention (paper Fig. 4a): a stored bit b encodes the value
     dot = 2 * popcount(~(a ^ w)) - K          (XNOR + popcount)
 
 Padding: packing pads K up to a multiple of 32 with zero bits.  Zero pads in
-*both* operands each contribute xnor(0,0)=1 to the popcount, so the identity
-above must use the *padded* K and subtract one extra per pad bit; callers use
-:func:`padded_bits` / keep the true K around (see kernels/ref.py).
+*both* operands each contribute xnor(0,0)=1 to the popcount; the combined
+padded-K and per-pad-bit correction is :func:`pad_correction`, so
+
+    dot = 2 * popcount(~(a ^ w)) - pad_correction(K)
+
+holds for any K, divisor of 32 or not (see kernels/ref.py, mvu_packed.py).
+
+2-bit weights use the sibling lane format (:func:`pack_int2`): four signed
+2-bit two's-complement fields per uint8 byte, LSB-first -- the int8 analog of
+the paper's SIMD-lane weight memory for WEIGHT_BITS=2.
 """
 
 from __future__ import annotations
@@ -21,10 +28,13 @@ import jax
 import jax.numpy as jnp
 
 WORD_BITS = 32
+INT2_PER_BYTE = 4
 
 
 def padded_bits(k: int) -> int:
-    """K rounded up to a whole number of 32-bit words."""
+    """K rounded up to a whole number of 32-bit words (0 stays 0)."""
+    if k < 0:
+        raise ValueError(f"bit count must be non-negative, got {k}")
     return ((k + WORD_BITS - 1) // WORD_BITS) * WORD_BITS
 
 
@@ -32,26 +42,64 @@ def num_words(k: int) -> int:
     return padded_bits(k) // WORD_BITS
 
 
+def pad_correction(k: int, kp: int | None = None) -> int:
+    """The constant subtracted in the padded XNOR-popcount identity.
+
+    With both operands zero-padded from K up to ``kp`` total bits (default
+    ``padded_bits(K)``; kernels pass their block-padded width), each pad bit
+    contributes xnor(0,0)=1 to the popcount on top of the bipolar -K offset,
+    so
+
+        dot = 2 * popcount(~(a ^ w)) - pad_correction(K, Kp)
+            = 2 * popcount(~(a ^ w)) - (Kp + (Kp - K))
+
+    For K a whole word multiple with no block padding this degrades to the
+    textbook ``2*pc - K``.
+    """
+    if kp is None:
+        kp = padded_bits(k)
+    if kp < k:
+        raise ValueError(f"padded width {kp} is smaller than bit count {k}")
+    return kp + (kp - k)
+
+
 def pack_bits(bits: jax.Array) -> jax.Array:
     """Pack {0,1} integer array along the last axis into uint32 words.
 
-    (..., K) -> (..., ceil(K/32)), LSB-first within each word.
+    (..., K) -> (..., ceil(K/32)), LSB-first within each word.  Each value
+    is masked to its LSB first: a multi-bit value (e.g. a 2-bit activation
+    fed to a 1-bit layer) would otherwise leak into the neighboring bit
+    position -- and into the pad bits of the last word, where it silently
+    breaks the XNOR/popcount pad-correction identity.
     """
     k = bits.shape[-1]
     kp = padded_bits(k)
     if kp != k:
         pad = [(0, 0)] * (bits.ndim - 1) + [(0, kp - k)]
         bits = jnp.pad(bits, pad)
-    bits = bits.astype(jnp.uint32).reshape(*bits.shape[:-1], kp // WORD_BITS, WORD_BITS)
+    bits = (bits.astype(jnp.uint32) & jnp.uint32(1)).reshape(
+        *bits.shape[:-1], kp // WORD_BITS, WORD_BITS)
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
     return jnp.sum(bits << shifts, axis=-1, dtype=jnp.uint32)
 
 
 def unpack_bits(words: jax.Array, count: int) -> jax.Array:
-    """Inverse of :func:`pack_bits`: (..., W) uint32 -> (..., count) int32 in {0,1}."""
+    """Inverse of :func:`pack_bits`: (..., W) uint32 -> (..., count) int32 in {0,1}.
+
+    ``count`` greater than the packed width (W*32) raises instead of silently
+    truncating to the available bits -- a caller passing the wrong K would
+    otherwise compute a plausible-looking dot over a shorter reduction.
+    """
+    if count < 0:
+        raise ValueError(f"bit count must be non-negative, got {count}")
+    width = words.shape[-1] * WORD_BITS
+    if count > width:
+        raise ValueError(
+            f"cannot unpack {count} bits from {words.shape[-1]} words "
+            f"({width} bits packed)")
     shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
     bits = (words[..., None] >> shifts) & jnp.uint32(1)
-    bits = bits.reshape(*words.shape[:-1], words.shape[-1] * WORD_BITS)
+    bits = bits.reshape(*words.shape[:-1], width)
     return bits[..., :count].astype(jnp.int32)
 
 
@@ -67,3 +115,53 @@ def bipolar_to_bits(x: jax.Array) -> jax.Array:
 
 def bits_to_bipolar(b: jax.Array) -> jax.Array:
     return (2 * b - 1).astype(jnp.int32)
+
+
+# ------------------------------------------------------------------ 2-bit lanes
+def padded_int2(k: int) -> int:
+    """K rounded up to a whole number of 4-field bytes (0 stays 0)."""
+    if k < 0:
+        raise ValueError(f"lane count must be non-negative, got {k}")
+    return ((k + INT2_PER_BYTE - 1) // INT2_PER_BYTE) * INT2_PER_BYTE
+
+
+def num_int2_bytes(k: int) -> int:
+    return padded_int2(k) // INT2_PER_BYTE
+
+
+def pack_int2(values: jax.Array) -> jax.Array:
+    """Pack signed 2-bit integers in [-2, 1] along the last axis into uint8.
+
+    (..., K) -> (..., ceil(K/4)); each byte holds four two's-complement 2-bit
+    fields, LSB-first.  Zero pads decode back to weight 0, so padded lanes
+    contribute nothing to a dot product.
+    """
+    k = values.shape[-1]
+    kp = padded_int2(k)
+    if kp != k:
+        pad = [(0, 0)] * (values.ndim - 1) + [(0, kp - k)]
+        values = jnp.pad(values, pad)
+    fields = (values.astype(jnp.int32) & 0x3).astype(jnp.uint8)
+    fields = fields.reshape(*fields.shape[:-1], kp // INT2_PER_BYTE, INT2_PER_BYTE)
+    shifts = jnp.arange(0, 2 * INT2_PER_BYTE, 2, dtype=jnp.uint8)
+    return jnp.sum(fields << shifts, axis=-1, dtype=jnp.uint32).astype(jnp.uint8)
+
+
+def unpack_int2(bytes_: jax.Array, count: int) -> jax.Array:
+    """Inverse of :func:`pack_int2`: (..., B) uint8 -> (..., count) int32 in [-2, 1].
+
+    Like :func:`unpack_bits`, ``count`` beyond the packed width raises.
+    """
+    if count < 0:
+        raise ValueError(f"lane count must be non-negative, got {count}")
+    width = bytes_.shape[-1] * INT2_PER_BYTE
+    if count > width:
+        raise ValueError(
+            f"cannot unpack {count} lanes from {bytes_.shape[-1]} bytes "
+            f"({width} lanes packed)")
+    shifts = jnp.arange(0, 2 * INT2_PER_BYTE, 2, dtype=jnp.uint8)
+    fields = (bytes_[..., None] >> shifts) & jnp.uint8(0x3)
+    fields = fields.reshape(*bytes_.shape[:-1], width).astype(jnp.int32)
+    # sign-extend the 2-bit two's-complement field: 0b10 -> -2, 0b11 -> -1
+    signed = jnp.where(fields >= 2, fields - 4, fields)
+    return signed[..., :count]

@@ -62,10 +62,10 @@ def test_golden_default_step_order_per_target():
     """The FINN ``build_dataflow_steps`` analog is part of the API contract:
     pin the default lists so a reorder is a deliberate, visible change."""
     assert default_steps("interpret") == [
-        "validate", "lower", "finalize", "fold", "dataflow"]
+        "validate", "lower", "finalize", "fold", "pack_weights", "dataflow"]
     assert default_steps("engine") == [
         "validate", "lower", "finalize", "fold", "fuse_epilogues",
-        "fuse_swu", "tune", "dataflow", "engine"]
+        "fuse_swu", "tune", "pack_weights", "dataflow", "engine"]
     assert default_steps("pipeline") == default_steps("engine")
     assert default_steps("serving") == default_steps("engine") + ["calibrate"]
     with pytest.raises(BuildError, match="unknown|target"):
@@ -142,8 +142,8 @@ def test_custom_step_injection_and_replacement():
     assert acc.graph[0].name == "renamed_in"
     assert acc.report.step_names == [
         "validate", "lower", "finalize", "audit_step", "fold",
-        "fuse_epilogues", "fuse_swu", "tune", "dataflow", "rename_step",
-        "engine"]
+        "fuse_epilogues", "fuse_swu", "tune", "pack_weights", "dataflow",
+        "rename_step", "engine"]
     x = _x()
     np.testing.assert_array_equal(np.asarray(acc(x)),
                                   np.asarray(acc.interpret(x)))

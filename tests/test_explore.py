@@ -232,6 +232,7 @@ def small_sweep(tmp_path_factory):
         graph=_mlp_graph(), name="tiny",
         build_overrides=dict(mode="standard", weight_bits=4, act_bits=2),
         pe_targets=(1, 8), simd_targets=(1, 16),
+        packings=(False,),  # folding-only sweep: the legacy record shape
         batch=16, reps=1, out_dir=str(out),
         tune_kwargs={"reps": 1, "max_measure": 1, "sample_m": 16},
     )
@@ -287,6 +288,39 @@ def test_explore_cache_phase_hit_accounting(small_sweep):
     assert small_sweep["floor_only"] == ["cache_speedup"]
     assert small_sweep["cache_speedup"] == pytest.approx(
         cache["cold_wall_s"] / cache["warm_wall_s"])
+
+
+def test_explore_packing_axis_doubles_grid_and_is_gated():
+    """The default packings=(False, True) crosses the weight-storage axis
+    into the grid: packed twins carry smaller weight bytes at equal
+    folding, land on the frontier, and the record gains the floor gate."""
+    cfg = ExploreConfig(
+        graph=_mlp_graph(), name="tiny_packed",
+        build_overrides=dict(mode="binary", weight_bits=1, act_bits=2),
+        pe_targets=(1,), simd_targets=(1, 16),
+        batch=16, reps=1,
+        tune_kwargs={"reps": 1, "max_measure": 1, "sample_m": 16},
+    )
+    rec = explore(cfg)
+    assert rec["n_points"] == len(rec["points"]) == 4  # 1x2 x {unpacked, packed}
+    assert rec["bit_exact"] is True
+    assert rec["grid"]["packings"] == [False, True]
+    by_id = {p["point_id"]: p for p in rec["points"]}
+    assert set(by_id) == {"pe1_simd1", "pe1_simd16",
+                          "pe1_simd1_packed", "pe1_simd16_packed"}
+    for pid in ("pe1_simd1", "pe1_simd16"):
+        plain, packed = by_id[pid], by_id[pid + "_packed"]
+        assert not plain["packed"] and packed["packed"]
+        assert packed["weight_bytes"] < plain["weight_bytes"]
+        assert all(n["packed"] for n in packed["nodes"])
+    assert rec["packed_points"] == 2
+    # a packed point always survives: only another packed point can match
+    # the strictly-smaller weight_bytes objective, and dominance among the
+    # packed twins leaves the dominator on the frontier
+    assert rec["packed_pareto_points"] >= 1
+    assert "packed_pareto_points" in rec["floor_only"]
+    assert rec["min_packed_pareto_points"] == 1
+    assert "weight_bytes" in PARETO_MINIMIZE
 
 
 def test_explore_record_round_trips_and_is_json_clean(small_sweep):

@@ -40,6 +40,59 @@ def test_xnor_popcount_identity(k, seed):
     assert dot == want
 
 
+@settings(max_examples=30, deadline=None)
+@given(
+    st.integers(1, 4),  # rows
+    st.integers(1, 19),  # K lanes (crosses byte boundaries)
+    st.integers(0, 2**31 - 1),
+)
+def test_int2_pack_unpack_roundtrip(rows, k, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(-2, 2, (rows, k)).astype(np.int32)  # [-2, 1]
+    packed = packing.pack_int2(jnp.asarray(vals))
+    assert packed.shape == (rows, packing.num_int2_bytes(k))
+    assert packed.dtype == jnp.uint8
+    back = np.asarray(packing.unpack_int2(packed, k))
+    np.testing.assert_array_equal(back, vals)
+
+
+def test_pack_bits_masks_to_lsb():
+    """Multi-bit inputs (e.g. 2-bit activations on a 1-bit layer) must not
+    leak into neighboring/pad bit positions -- that silently breaks the
+    XNOR/popcount pad-correction identity."""
+    vals = jnp.asarray([[2, 3, 0, 1, 2]])  # value 2 has LSB 0
+    packed = packing.pack_bits(vals)
+    np.testing.assert_array_equal(
+        np.asarray(packing.unpack_bits(packed, 5)), [[0, 1, 0, 1, 0]]
+    )
+    # pad bits of the last word stay zero even with multi-bit inputs
+    assert int(packed[0, 0]) == 0b01010
+
+
+def test_pad_correction():
+    # whole-word K degrades to the textbook 2*pc - K
+    assert packing.pad_correction(64) == 64
+    # K=600 pads to 608: Kp + (Kp - K)
+    assert packing.pad_correction(600) == 608 + 8
+    # kernels pass their block-padded width explicitly
+    assert packing.pad_correction(600, 640) == 640 + 40
+    with pytest.raises(ValueError):
+        packing.pad_correction(64, 32)
+
+
+def test_pack_zero_k_and_unpack_overflow_raise():
+    empty = packing.pack_bits(jnp.zeros((3, 0), jnp.int32))
+    assert empty.shape == (3, 0)
+    with pytest.raises(ValueError):
+        packing.unpack_bits(jnp.zeros((2, 2), jnp.uint32), 65)
+    with pytest.raises(ValueError):
+        packing.unpack_int2(jnp.zeros((2, 2), jnp.uint8), 9)
+    with pytest.raises(ValueError):
+        packing.unpack_bits(jnp.zeros((2, 2), jnp.uint32), -1)
+    with pytest.raises(ValueError):
+        packing.padded_bits(-1)
+
+
 def test_bipolar_maps():
     x = jnp.asarray([-3, -1, 0, 1, 5])
     b = packing.bipolar_to_bits(x)
